@@ -1,0 +1,78 @@
+"""Figure 4 reproduction: overhead of N-way time-slicing (replica splicing).
+
+On one device, an s-way spliced step does exactly the work of s fully
+scaled-up per-device steps, so ``time(splice=s) / time(splice=1)`` is the
+paper's overhead-beyond-ideal metric directly.  The squashing-disabled
+comparison (the paper reports 18-163% blowups) comes from the buffer-level
+splicing engine: redundant optimizer updates + swap traffic, converted to
+time via host-link bandwidth.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.configs.base import TrainConfig
+from repro.core.splicing import SplicedTrainer
+from repro.models.frontend import synth_extra_inputs
+from repro.training.state import init_train_state
+from repro.training.step import build_train_step
+from repro.utils import constants
+
+MODELS = ["olmo-1b", "mamba2-130m", "paper-gpt2-1.8b"]
+STEPS = 8
+
+
+def _time(fn, *args) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out[1]["loss"])
+    t0 = time.perf_counter()
+    for _ in range(STEPS):
+        out = fn(*args)
+        jax.block_until_ready(out[1]["loss"])
+    return (time.perf_counter() - t0) / STEPS
+
+
+def run() -> List[Dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for arch in MODELS:
+        cfg = get_smoke_config(arch)
+        tcfg = TrainConfig(total_steps=100, warmup_steps=1)
+        state = init_train_state(cfg, tcfg, key)
+        for splice in (2, 4):
+            g = 4 * splice
+            tokens = jax.random.randint(key, (g, 64), 0, cfg.vocab_size)
+            batch = {"tokens": tokens, "labels": tokens}
+            batch.update(synth_extra_inputs(cfg, g, key))
+            t1 = _time(jax.jit(build_train_step(cfg, tcfg, splice=1)),
+                       state, batch)
+            ts = _time(jax.jit(build_train_step(cfg, tcfg, splice=splice)),
+                       state, batch)
+            overhead = (ts - t1) / t1 * 100
+            rows.append({
+                "name": f"fig4/{arch}/splice{splice}",
+                "us_per_call": ts * 1e6,
+                "derived": f"overhead_pct={overhead:.2f}",
+            })
+
+        # squashing on/off at the buffer level (swap bytes -> modeled time)
+        for squash in (True, False):
+            t = SplicedTrainer(n_ranks=4, dim=4096, seed=1, squash=squash)
+            for _ in range(6):
+                t.run_minibatch()
+            m = t.device.metrics
+            swap_s = (m.swapout_bytes + m.swapin_bytes) \
+                / constants.HOST_DEVICE_BANDWIDTH
+            rows.append({
+                "name": f"fig4/{arch}/buffers/"
+                        f"{'squash' if squash else 'nosquash'}",
+                "us_per_call": swap_s / 6 * 1e6,
+                "derived": (f"swap_MB={(m.swapout_bytes+m.swapin_bytes)/1e6:.3f};"
+                            f"updates={m.executed_update_ops};"
+                            f"elided={m.elided_swapins}"),
+            })
+    return rows

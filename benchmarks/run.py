@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+- table3_overhead  — device-proxy/barrier steady-state overhead (Table 3)
+- table4_checkpoint — checkpoint sizes, S_G dedup + incremental (Table 4)
+- fig4_splicing    — N-way time-slicing overhead, squash on/off (Figure 4)
+- table5_migration — migration/resize latency breakdown (Table 5)
+- sched_sim        — fleet utilization + SLA vs static baseline (§1.1)
+- kernels_bench    — Pallas kernel micro-benchmarks
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = ["table3_overhead", "table4_checkpoint", "fig4_splicing",
+           "table5_migration", "sched_sim", "kernels_bench"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    mods = [m for m in MODULES if args.only is None or args.only in m]
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name in mods:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            for row in mod.run():
+                print(f"{row['name']},{row['us_per_call']:.1f},"
+                      f"\"{row['derived']}\"", flush=True)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Table 5 reproduction: end-to-end latency of migration and resizing.
+
+Migration (m-to-m), scale-down (m-to-n) and scale-up (n-to-m) with the
+barrier / dump / transfer / restore breakdown.  Dump/restore are measured;
+transfer is modeled as deduped bytes over the blob-store link (the paper's
+dominant term).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs import get_smoke_config
+from repro.configs.base import TrainConfig
+from repro.core.checkpoint import CheckpointStore
+from repro.core.elastic import ElasticRuntime
+from repro.core.migration import migrate
+
+MODELS = ["olmo-1b", "mamba2-130m"]
+MOVES = [(4, 4), (4, 2), (2, 4)]      # migrate / scale-down / scale-up
+
+
+def run() -> List[Dict]:
+    rows = []
+    for arch in MODELS:
+        cfg = get_smoke_config(arch)
+        tcfg = TrainConfig(total_steps=20, warmup_steps=1)
+        for m, n in MOVES:
+            rt = ElasticRuntime(cfg, tcfg, 4, m, 8, 32)
+            rt.run_steps(2)
+            store = CheckpointStore()
+            _, rep = migrate(rt, store, f"{arch}-{m}to{n}", n, cfg, tcfg,
+                             8, 32)
+            rows.append({
+                "name": f"table5/{arch}/{m}to{n}",
+                "us_per_call": rep.total_seconds * 1e6,
+                "derived": (f"barrier_s={rep.barrier_seconds:.2f};"
+                            f"dump_s={rep.dump_seconds:.2f};"
+                            f"transfer_s={rep.transfer_seconds():.3f};"
+                            f"restore_s={rep.restore_seconds:.2f};"
+                            f"bytes_MB={rep.device_stored_bytes/1e6:.1f};"
+                            f"work_conserving={rep.work_conserving}"),
+            })
+    return rows

@@ -1,0 +1,51 @@
+"""Preempt -> migrate -> resume, end to end (paper §4, Table 5).
+
+Shows that (a) the barrier quiesces all workers within two mini-batches,
+(b) the checkpoint is consistent and deduped, (c) the job resumes at
+EXACTLY the preempted step on different resources, bit-identically.
+
+    PYTHONPATH=src python examples/elastic_migration.py
+"""
+from repro.configs import get_smoke_config
+from repro.configs.base import TrainConfig
+from repro.core.barrier import run_barrier_simulation
+from repro.core.checkpoint import CheckpointStore
+from repro.core.elastic import ElasticRuntime
+from repro.core.migration import migrate
+
+
+def main() -> None:
+    cfg = get_smoke_config("mamba2-130m")
+    tcfg = TrainConfig(total_steps=20, warmup_steps=1, learning_rate=1e-3)
+    job = ElasticRuntime(cfg, tcfg, world_size=4, physical_devices=4,
+                         global_batch=8, seq_len=32)
+    print("== run 5 steps on cluster A (4 devices) ==")
+    for rec in job.run_steps(5):
+        print(f"  step {rec['step']} loss={rec['loss']:.4f}")
+
+    print("== scheduler decides to preempt: acquire distributed barrier ==")
+    bres = run_barrier_simulation(world_size=4, n_collectives=3,
+                                  command_at_step=7, schedule_seed=1)
+    print(f"  barrier acquired={bres.acquired} within "
+          f"{bres.minibatches_to_acquire} mini-batches; "
+          f"consistent cut={bres.consistent_cut}")
+
+    print("== migrate to cluster B (2 devices, 2-way splicing) ==")
+    store = CheckpointStore()
+    job_b, report = migrate(job, store, "demo-job", 2, cfg, tcfg, 8, 32)
+    print(f"  barrier {report.barrier_seconds:.2f}s | dump "
+          f"{report.dump_seconds:.2f}s | transfer "
+          f"{report.transfer_seconds():.3f}s | restore "
+          f"{report.restore_seconds:.2f}s | total "
+          f"{report.total_seconds:.2f}s")
+    print(f"  work conserving: {report.work_conserving} "
+          f"(resumed at step {int(job_b.state['step'])})")
+
+    print("== continue on cluster B — trajectory is unchanged ==")
+    for rec in job_b.run_steps(5):
+        print(f"  step {rec['step']} loss={rec['loss']:.4f} "
+              f"(physical={rec['physical']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Planet-scale fleet simulation: Singularity policy vs static baseline.
+
+A 2-region / 4-cluster / 2048-GPU fleet under a mixed-tier workload.
+The elastic policy preempts, resizes and migrates (all work-conserving
+because of the mechanisms in core/) and drives utilization up while
+protecting premium-tier SLAs.
+
+    PYTHONPATH=src python examples/fleet_scheduling.py
+"""
+from repro.scheduler.policy import ElasticPolicy, StaticGangPolicy
+from repro.scheduler.simulator import (FleetSimulator, SimConfig, make_fleet,
+                                       synth_workload)
+
+
+def main() -> None:
+    for seed in (3, 11):
+        print(f"== workload seed {seed} (120 jobs, 2048 GPUs, 36h) ==")
+        for policy in (StaticGangPolicy(), ElasticPolicy()):
+            fleet = make_fleet()
+            jobs = synth_workload(120, fleet.total(), seed=seed)
+            sim = FleetSimulator(fleet, jobs, policy,
+                                 SimConfig(horizon_seconds=36 * 3600))
+            res = sim.run()
+            print(f"  {policy.name:8s} {res.summary()}")
+            print(f"           idle={res.gpu_seconds_idle/3.6e6:.1f} kGPUh")
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""HLO text analysis: collective-communication byte accounting.
+
+``compiled.cost_analysis()`` has no collective term, so we parse the
+optimized HLO and sum the RESULT-shape bytes of every collective op
+(all-gather, all-reduce, reduce-scatter, all-to-all, collective-permute).
+This approximates per-device bytes crossing the interconnect per op; ring
+algorithms move ~2x for all-reduce — we report raw payload bytes and note
+the convention in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one 'f32[2,4]' shape or a '(f32[..], s8[..])' tuple."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-type result bytes summed over all instructions."""
+    out: Dict[str, int] = {c: 0 for c in COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        shape_str, opname = m.group(1), m.group(2)
+        base = opname.rstrip("-start").rstrip("-done") if opname.endswith(
+            ("-start", "-done")) else opname
+        for c in COLLECTIVES:
+            # count only the -start (or plain) form to avoid double counting
+            if opname == c or opname == f"{c}-start":
+                out[c] += _shape_bytes(shape_str)
+                out["count"] += 1
+                break
+    out["total"] = sum(out[c] for c in COLLECTIVES)
+    return out
+
+
+def op_histogram(hlo_text: str) -> Dict[str, int]:
+    """Instruction-name histogram (fusion/remat forensics)."""
+    hist: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*.+?\s+([\w\-]+)\(",
+                     line)
+        if m:
+            hist[m.group(1)] = hist.get(m.group(1), 0) + 1
+    return hist

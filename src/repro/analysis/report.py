@@ -1,0 +1,97 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from results/.
+
+    PYTHONPATH=src python -m repro.analysis.report > results/roofline.md
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import ASSIGNED_ARCHS
+from repro.configs.base import INPUT_SHAPES
+
+RESULTS = "results/dryrun"
+
+
+def load(arch: str, shape: str, mesh: str) -> Optional[Dict]:
+    p = os.path.join(RESULTS, f"{arch}.{shape}.{mesh}.json")
+    if not os.path.exists(p):
+        return None
+    return json.load(open(p))
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.3g}us"
+    if x < 1:
+        return f"{x*1e3:.3g}ms"
+    return f"{x:.3g}s"
+
+
+def one_liner(r: Dict) -> str:
+    """What would move the dominant term down (per-pair §Roofline note)."""
+    rf = r["roofline"]
+    dom = rf["dominant"]
+    shape = r["shape"]
+    if dom == "memory":
+        if "decode" in shape or shape == "long_500k":
+            return ("memory-bound on cache reads: quantize the KV cache / "
+                    "fuse the per-layer cache update (loop-carried copies "
+                    "dominate)")
+        return ("memory-bound on activations: larger fusion (Pallas attention "
+                "kernel on TPU), higher splice factor to shrink live set, "
+                "bf16 norm statistics")
+    if dom == "collective":
+        return ("collective-bound: reduce-scatter gradients instead of "
+                "all-reduce, overlap FSDP all-gathers with compute, shard "
+                "experts deeper")
+    return ("compute-bound (near roofline): raise arithmetic intensity via "
+            "longer per-slice microbatches; MXU-align head_dim")
+
+
+def table() -> str:
+    lines = [
+        "| arch | shape | mesh | chips | compute | memory | collective | "
+        "dominant | useful flops | bytes/device |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    notes = []
+    for a in ASSIGNED_ARCHS:
+        for s in INPUT_SHAPES:
+            for m in ("single", "multi"):
+                r = load(a, s.name, m)
+                if r is None:
+                    lines.append(f"| {a} | {s.name} | {m} | - | MISSING |"
+                                 " | | | | |")
+                    continue
+                if r.get("status") == "skipped":
+                    lines.append(f"| {a} | {s.name} | {m} | - | SKIPPED |"
+                                 f" | | | | {r['reason'][:60]} |")
+                    continue
+                if r.get("status") != "ok":
+                    lines.append(f"| {a} | {s.name} | {m} | - | "
+                                 f"{r['status'].upper()} | | | | | |")
+                    continue
+                rf = r["roofline"]
+                bpd = r["memory"]["bytes_per_device"] if r.get("memory") else 0
+                swa = " (SWA variant)" if r.get("swa_variant") else ""
+                lines.append(
+                    f"| {a}{swa} | {s.name} | {m} | {r['chips']} | "
+                    f"{fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} | "
+                    f"{fmt_s(rf['collective_s'])} | **{rf['dominant']}** | "
+                    f"{rf['useful_flop_ratio']:.3f} | {bpd/1e9:.2f} GB |")
+                if m == "single":
+                    notes.append(f"- **{a} x {s.name}**: {one_liner(r)}")
+    return "\n".join(lines) + "\n\n### Per-pair bottleneck notes (single-pod)\n" \
+        + "\n".join(notes)
+
+
+def main() -> None:
+    print(table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e target).
+
+    compute term    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory term     = HLO_bytes / HBM_bw               (per chip)
+    collective term = collective_bytes / link_bw       (per chip)
+
+``cost_analysis`` is measured on the SPMD-partitioned per-device module, so
+terms are per-chip step latencies; the dominant term is the bottleneck.
+MODEL_FLOPS (6·N·D train / 2·N·D prefill / 2·N_active·B decode) over
+HLO_FLOPs measures how much compiled compute is "useful" (catches remat and
+padding waste; can exceed 1 when XLA's flop counting under-counts fused
+ops).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.analysis.hlo_cost import HloCost, analyze_hlo
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.utils import constants
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float               # per chip
+    hlo_bytes: float               # per chip
+    coll_bytes: float              # per chip
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_total: float       # whole job, analytic
+    useful_flop_ratio: float       # model_flops/chips / hlo_flops
+    bytes_per_device: Optional[float] = None
+    coll_breakdown: Optional[Dict[str, int]] = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_seconds(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "bytes_per_device": self.bytes_per_device,
+        }
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Analytic useful FLOPs per step for the whole job."""
+    n = cfg.param_count()
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def build_report(arch: str, shape_cfg: ShapeConfig, mesh_name: str,
+                 chips: int, cost: Dict, hlo_text: str,
+                 cfg: ModelConfig, memory_stats: Optional[Dict] = None,
+                 hlo_cost: Optional[HloCost] = None) -> RooflineReport:
+    """Terms from the trip-count-aware HLO analysis (``analyze_hlo``);
+    XLA's own cost_analysis (which counts while bodies once) is kept in the
+    dry-run record for cross-checking."""
+    hc = hlo_cost if hlo_cost is not None else analyze_hlo(hlo_text)
+    flops = hc.flops
+    bytes_accessed = hc.bytes
+    mf = model_flops(cfg, shape_cfg)
+    return RooflineReport(
+        arch=arch, shape=shape_cfg.name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=bytes_accessed,
+        coll_bytes=hc.coll_bytes,
+        compute_s=flops / constants.PEAK_BF16_FLOPS,
+        memory_s=bytes_accessed / constants.HBM_BANDWIDTH,
+        collective_s=hc.coll_bytes / constants.ICI_LINK_BANDWIDTH,
+        model_flops_total=mf,
+        useful_flop_ratio=(mf / chips) / flops if flops else 0.0,
+        bytes_per_device=(memory_stats or {}).get("bytes_per_device"),
+        coll_breakdown=dict(hc.coll_by_type))

@@ -1,0 +1,22 @@
+"""qwen3-moe-30b-a3b [moe] — 128 experts, top-8.
+
+48L d_model=2048 32H (GQA kv=4) d_ff=768(per-expert) vocab=151936, MoE 128e top-8.
+[hf:Qwen/Qwen3-30B-A3B]
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    arch_type="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    d_ff=768,                  # per-expert FFN width
+    vocab_size=151936,
+    rope_theta=1000000.0,
+    norm="rmsnorm",
+    mlp="swiglu",
+    moe=MoEConfig(num_experts=128, top_k=8),
+    source="hf:Qwen/Qwen3-30B-A3B",
+)

@@ -1,0 +1,35 @@
+"""Singularity core mechanisms: the paper's contribution.
+
+- ``barrier``       — tandem meta-allreduce distributed barrier (§4.3.1)
+- ``barrier_jax``   — the same 2-int protocol fused into the jitted step
+- ``buffers``       — bidirectional allocator / device memory model (§5.2.2)
+- ``device_proxy``  — interception, handle virtualization, log/replay (§3, §4.2)
+- ``splicing``      — replica splicing engine (§5.1-§5.2)
+- ``validation``    — conservative squash validation (§5.2.3)
+- ``checkpoint``    — content-deduped consistent checkpoints (§4, §4.6)
+- ``elastic``       — transparent elastic runtime over the spliced step (§5)
+- ``migration``     — preempt -> dump -> transfer -> restore flow (§4.5)
+- ``sla``           — GPU-fraction SLA tiers and accounting (§2.5)
+"""
+from repro.core.barrier import (  # noqa: F401
+    BarrierResult,
+    BarrierWorker,
+    CollectiveEngine,
+    run_barrier_simulation,
+)
+from repro.core.barrier_jax import BarrierDriver, meta_allreduce  # noqa: F401
+from repro.core.buffers import Buffer, DeviceMemory, OutOfMemory  # noqa: F401
+from repro.core.checkpoint import CheckpointStore, SnapshotStats  # noqa: F401
+from repro.core.device_proxy import (  # noqa: F401
+    DeviceProxyClient,
+    DeviceProxyServer,
+)
+from repro.core.elastic import ElasticRuntime  # noqa: F401
+from repro.core.migration import MigrationReport, checkpoint_job, migrate  # noqa: F401
+from repro.core.sla import TIERS, GpuFractionAccount, SLATier  # noqa: F401
+from repro.core.splicing import SplicedDevice, SplicedTrainer, SpliceMetrics  # noqa: F401
+from repro.core.validation import (  # noqa: F401
+    ValidationReport,
+    run_validated_training,
+    validate_squashing_window,
+)

@@ -1,0 +1,145 @@
+"""Elastic runtime: transparent resize of a live job (§5).
+
+To the job, the world size W never changes.  The runtime maps W logical
+ranks onto P physical devices; resizing swaps the splice factor s = W/P in
+the compiled step — the training state is untouched (work-conserving), the
+data pipeline cursor is untouched, and the trajectory is invariant (tested).
+
+ZeRO partial sharding (§5.4): a job whose optimizer state is sharded
+``zero_shard_factor``-way can only be spliced up to W / shard_factor — the
+runtime enforces the paper's placement rule (only replicas of the same
+shard are spliced together).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.barrier_jax import BarrierDriver
+from repro.data.pipeline import DataPipeline
+from repro.models.frontend import synth_extra_inputs
+from repro.optim.zero import validate_partial_sharding
+from repro.training.state import TrainState, init_train_state
+from repro.training.step import build_train_step
+
+
+class ElasticRuntime:
+    """Host-side elastic training driver (CPU-scale; the production path
+    lowers the same spliced step onto the pod mesh via launch/)."""
+
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, world_size: int,
+                 physical_devices: int, global_batch: int, seq_len: int,
+                 seed: int = 0, state: Optional[TrainState] = None,
+                 pipeline_state: Optional[Dict] = None):
+        assert world_size % physical_devices == 0
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.world_size = world_size
+        self.physical = physical_devices
+        validate_partial_sharding(world_size, tcfg.zero_shard_factor,
+                                  world_size // physical_devices)
+        self.pipeline = DataPipeline(cfg.vocab_size, seq_len, global_batch,
+                                     world_size, seed=tcfg.seed)
+        if pipeline_state:
+            self.pipeline.restore(pipeline_state)
+        key = jax.random.PRNGKey(tcfg.seed)
+        self.state = state if state is not None else init_train_state(
+            cfg, tcfg, key)
+        self.barrier = BarrierDriver(n_shards=1)
+        self._extra_key = jax.random.PRNGKey(tcfg.seed + 1)
+        self._steps: Dict[int, any] = {}
+        self.history: List[Dict] = []
+        self.compile_seconds = 0.0
+
+    # ------------------------------------------------------------------ step
+    @property
+    def splice(self) -> int:
+        return self.world_size // self.physical
+
+    def _step_fn(self):
+        s = self.splice
+        if s not in self._steps:
+            t0 = time.time()
+            fn = jax.jit(build_train_step(self.cfg, self.tcfg, splice=s,
+                                          with_barrier=True))
+            self._steps[s] = fn
+            self.compile_seconds += time.time() - t0
+        return self._steps[s]
+
+    # ----------------------------------------------------- preemption flow
+    def request_preemption(self) -> None:
+        """Scheduler command: quiesce at the next safe boundary (§4).  The
+        (need, ack) payload rides the job's own compiled step — the
+        in-graph tandem meta-allreduce."""
+        self.barrier.request()
+
+    @property
+    def quiesced(self) -> bool:
+        return self.barrier.acquired
+
+    def _batch(self) -> Dict:
+        tokens, labels = self.pipeline.next_batch()
+        batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+        batch.update(synth_extra_inputs(self.cfg, tokens.shape[0],
+                                        self._extra_key))
+        return batch
+
+    def run_steps(self, n: int, stop_on_barrier: bool = False) -> List[Dict]:
+        out = []
+        fn = self._step_fn()
+        for _ in range(n):
+            batch = self._batch()
+            self.state, metrics = fn(self.state, batch, self.barrier.flags())
+            acquired = self.barrier.observe(metrics["barrier"])
+            rec = {"step": int(self.state["step"]),
+                   "loss": float(metrics["loss"]),
+                   "splice": self.splice,
+                   "physical": self.physical,
+                   "barrier_acquired": acquired}
+            out.append(rec)
+            self.history.append(rec)
+            if acquired and stop_on_barrier:
+                break
+        return out
+
+    # ---------------------------------------------------------------- resize
+    def resize(self, new_physical: int) -> Dict:
+        """Transparent resize: same logical world, new physical mapping.
+
+        Work-conserving by construction: state and data cursor unchanged.
+        """
+        assert self.world_size % new_physical == 0, \
+            f"world {self.world_size} not divisible by {new_physical}"
+        validate_partial_sharding(self.world_size, self.tcfg.zero_shard_factor,
+                                  self.world_size // new_physical)
+        old = self.physical
+        t0 = time.time()
+        self.physical = new_physical
+        self._step_fn()     # build/compile the new splice's step
+        return {"from": old, "to": new_physical,
+                "splice": self.splice,
+                "resize_seconds": time.time() - t0,
+                "at_step": int(self.state["step"])}
+
+    # ------------------------------------------------------------- snapshots
+    def snapshot(self) -> Dict:
+        """The complete program state (work-conserving checkpoint payload)."""
+        return {
+            "state": jax.tree_util.tree_map(np.asarray, self.state),
+            "pipeline": self.pipeline.snapshot(),
+            "world_size": self.world_size,
+        }
+
+    @classmethod
+    def from_snapshot(cls, cfg: ModelConfig, tcfg: TrainConfig, snap: Dict,
+                      physical_devices: int, global_batch: int, seq_len: int
+                      ) -> "ElasticRuntime":
+        state = jax.tree_util.tree_map(jnp.asarray, snap["state"])
+        return cls(cfg, tcfg, snap["world_size"], physical_devices,
+                   global_batch, seq_len, state=state,
+                   pipeline_state=snap["pipeline"])

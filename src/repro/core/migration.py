@@ -1,0 +1,116 @@
+"""Transparent migration & resizing flow (§4.5, Table 5).
+
+End-to-end: acquire barrier -> dump (device + host state, deduped) ->
+upload -> download -> restore -> fresh rendezvous -> resume.  On this
+CPU container the serialize/deserialize times are measured for real; the
+blob-store transfer is modelled as bytes / bandwidth (constants in
+``utils/constants.py``), mirroring how the paper reports Transfer as the
+dominant component.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.barrier import run_barrier_simulation
+from repro.core.checkpoint import CheckpointStore, SnapshotStats
+from repro.core.elastic import ElasticRuntime
+from repro.utils import constants
+
+
+@dataclasses.dataclass
+class MigrationReport:
+    job_id: str
+    from_physical: int
+    to_physical: int
+    barrier_seconds: float
+    barrier_minibatches: int
+    dump_seconds: float
+    upload_seconds: float
+    download_seconds: float
+    restore_seconds: float
+    total_seconds: float
+    device_stored_bytes: int
+    host_stored_bytes: int
+    work_conserving: bool       # resumed at exactly the preempted step
+
+    def transfer_seconds(self) -> float:
+        return self.upload_seconds + self.download_seconds
+
+
+def checkpoint_job(runtime: ElasticRuntime, store: CheckpointStore,
+                   job_id: str) -> SnapshotStats:
+    """Consistent checkpoint of all W logical workers.
+
+    DP replicas carry identical params/optimizer state — the content-
+    addressed store dedups them so stored device bytes are independent of W
+    (Table 4).  Host state (data cursor, step) is per-worker.
+    """
+    snap = runtime.snapshot()
+    device_by_worker = {w: snap["state"] for w in range(runtime.world_size)}
+    host_by_worker = {w: {"pipeline": snap["pipeline"],
+                          "world_size": snap["world_size"],
+                          "rank": w}
+                      for w in range(runtime.world_size)}
+    return store.snapshot(job_id, int(runtime.state["step"]),
+                          device_by_worker, host_by_worker)
+
+
+def migrate(runtime: ElasticRuntime, store: CheckpointStore, job_id: str,
+            to_physical: int, cfg: ModelConfig, tcfg: TrainConfig,
+            global_batch: int, seq_len: int,
+            per_step_seconds: float = 0.5,
+            blob_bandwidth: float = constants.BLOB_STORE_BANDWIDTH,
+            barrier_seed: int = 0) -> tuple:
+    """Preempt ``runtime`` and resume it on ``to_physical`` devices.
+
+    Returns (new_runtime, MigrationReport).
+    """
+    step_before = int(runtime.state["step"])
+
+    # 1. barrier: the distributed-protocol cost in mini-batches (from the
+    #    faithful protocol engine), converted to wall time
+    bres = run_barrier_simulation(
+        world_size=runtime.world_size, n_collectives=4,
+        command_at_step=3, schedule_seed=barrier_seed)
+    assert bres.acquired and bres.consistent_cut
+    barrier_s = bres.minibatches_to_acquire * per_step_seconds
+
+    # 2. dump
+    t0 = time.time()
+    stats = checkpoint_job(runtime, store, job_id)
+    dump_s = time.time() - t0
+
+    # 3. transfer (modelled: the paper uploads to/downloads from blob store)
+    total_bytes = stats.device_stored_bytes + stats.host_stored_bytes
+    upload_s = total_bytes / blob_bandwidth
+    download_s = total_bytes / blob_bandwidth
+
+    # 4. restore on the destination (fresh device proxies + replay; here:
+    #    fresh runtime + state load + step compile = the rendezvous)
+    t0 = time.time()
+    device, host, step = store.restore(job_id)
+    new_runtime = ElasticRuntime.from_snapshot(
+        cfg, tcfg,
+        {"state": device[0], "pipeline": host[0]["pipeline"],
+         "world_size": host[0]["world_size"]},
+        to_physical, global_batch, seq_len)
+    new_runtime._step_fn()      # compile at destination
+    restore_s = time.time() - t0
+
+    work_conserving = int(new_runtime.state["step"]) == step_before
+    report = MigrationReport(
+        job_id=job_id, from_physical=runtime.physical,
+        to_physical=to_physical, barrier_seconds=barrier_s,
+        barrier_minibatches=bres.minibatches_to_acquire,
+        dump_seconds=dump_s, upload_seconds=upload_s,
+        download_seconds=download_s, restore_seconds=restore_s,
+        total_seconds=barrier_s + dump_s + upload_s + download_s + restore_s,
+        device_stored_bytes=stats.device_stored_bytes,
+        host_stored_bytes=stats.host_stored_bytes,
+        work_conserving=work_conserving)
+    return new_runtime, report

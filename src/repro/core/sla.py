@@ -1,0 +1,88 @@
+"""GPU-fraction SLAs (§2.5, Table 1).
+
+``gpu_fraction = T_ideal / T_real``: the relative slowdown a job experiences
+from preemption/scale-down versus dedicated capacity.  Tiers:
+
+  Premium  — 95% guarantee, almost never preempted, scale-up first.
+  Standard — 70% guarantee, infrequent preemption.
+  Basic    — best effort (spot-like), preempted first, scale-down first.
+
+The SLA is enforced at an hourly granularity; the scheduler consults
+``worst_window_fraction`` when choosing preemption/shrink victims.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import List, Tuple
+
+HOUR = 3600.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SLATier:
+    name: str
+    gpu_fraction: float      # guaranteed T_ideal/T_real
+    preempt_priority: int    # lower = preempted later
+    scaleup_priority: int    # lower = offered spare capacity first
+
+
+TIERS = {
+    "premium": SLATier("premium", 0.95, preempt_priority=2, scaleup_priority=0),
+    "standard": SLATier("standard", 0.70, preempt_priority=1, scaleup_priority=1),
+    "basic": SLATier("basic", 0.0, preempt_priority=0, scaleup_priority=2),
+}
+
+
+class GpuFractionAccount:
+    """Tracks a job's delivered vs. demanded GPU time over wall intervals."""
+
+    def __init__(self, tier: str, demand_gpus: int):
+        self.tier = TIERS[tier]
+        self.demand = demand_gpus
+        # (start, end, allocated_gpus); contiguous, append-only
+        self.intervals: List[Tuple[float, float, int]] = []
+
+    def record(self, start: float, end: float, allocated: int) -> None:
+        if end <= start:
+            return
+        self.intervals.append((start, end, allocated))
+
+    # progress rate while holding g of n demanded GPUs is g/n (work-
+    # conserving elasticity; splicing overhead is handled separately)
+    def delivered_seconds(self, t0: float, t1: float) -> float:
+        tot = 0.0
+        for s, e, g in self.intervals:
+            lo, hi = max(s, t0), min(e, t1)
+            if hi > lo:
+                tot += (hi - lo) * min(g / self.demand, 1.0) \
+                    if self.demand else 0.0
+        return tot
+
+    def fraction(self, t0: float, t1: float) -> float:
+        if t1 <= t0:
+            return 1.0
+        return self.delivered_seconds(t0, t1) / (t1 - t0)
+
+    def worst_window_fraction(self, now: float, window: float = HOUR) -> float:
+        """Worst fraction over any completed window (hourly enforcement)."""
+        if not self.intervals:
+            return 1.0
+        start = self.intervals[0][0]
+        worst = 1.0
+        t = start
+        while t + window <= now + 1e-9:
+            worst = min(worst, self.fraction(t, t + window))
+            t += window
+        # also the trailing partial window
+        if now > start:
+            worst = min(worst, self.fraction(max(start, now - window), now))
+        return worst
+
+    def violated(self, now: float) -> bool:
+        return self.worst_window_fraction(now) < self.tier.gpu_fraction - 1e-9
+
+    def headroom(self, now: float, window: float = HOUR) -> float:
+        """How much fraction above the guarantee this job currently has —
+        the scheduler shrinks/preempts high-headroom jobs first."""
+        return self.worst_window_fraction(now, window) - self.tier.gpu_fraction

@@ -1,0 +1,1 @@
+from repro.kernels.checksum.ops import fingerprint  # noqa: F401

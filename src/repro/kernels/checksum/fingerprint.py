@@ -1,0 +1,68 @@
+"""On-device content-fingerprint kernel (Pallas TPU).
+
+The paper's checksum-based dedup (§4.6 checkpoint compression, §5.2.1
+conditional swap) fingerprints EVERY live device buffer at every context
+switch and checkpoint — on TPU this must run at HBM bandwidth on-device so
+only the 128-bit digest crosses to the host.
+
+Digest: four uint32 lanes of position-weighted modular sums.  Per-position
+weights make the digest permutation-sensitive; per-block partial digests
+combine by wrapping addition, so the grid reduction is embarrassingly
+parallel.  Block shape (ROWS, 128): last dim matches the TPU lane width,
+ROWS*128*4B per block sized well under VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+ROWS = 256                    # 256 x 128 x 4B = 128 KiB per input block
+LANES = 128
+
+# numpy scalars embed as jaxpr literals (Pallas kernels must not capture
+# traced constants, and python ints > int32-max overflow weak typing)
+P1 = np.uint32(2654435761)    # Knuth multiplicative
+P2 = np.uint32(0x9E3779B9)    # golden ratio
+P3 = np.uint32(0x85EBCA6B)    # murmur3 c1
+P4 = np.uint32(0xC2B2AE35)    # murmur3 c2
+
+
+def _digest_block(x: jax.Array, pos: jax.Array) -> jax.Array:
+    """4-lane partial digest of a uint32 block with global positions."""
+    w = pos * P1 + P2
+    l0 = jnp.sum(x * w, dtype=jnp.uint32)
+    l1 = jnp.sum((x ^ P3) * (w ^ P4), dtype=jnp.uint32)
+    l2 = jnp.sum((x * x + P4) * w, dtype=jnp.uint32)
+    l3 = jnp.sum((x + pos) * (pos * P3 + P1), dtype=jnp.uint32)
+    return jnp.stack([l0, l1, l2, l3])
+
+
+def _kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+    x = x_ref[...]
+    rows = jax.lax.broadcasted_iota(jnp.uint32, (ROWS, LANES), 0)
+    lanes = jax.lax.broadcasted_iota(jnp.uint32, (ROWS, LANES), 1)
+    base = jnp.uint32(i) * jnp.uint32(ROWS * LANES)
+    pos = base + rows * jnp.uint32(LANES) + lanes
+    o_ref[0, :] = _digest_block(x, pos)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fingerprint_u32(words: jax.Array, interpret: bool = True) -> jax.Array:
+    """words: (n_blocks*ROWS, LANES) uint32 -> (4,) uint32 digest."""
+    n, l = words.shape
+    assert l == LANES and n % ROWS == 0, (n, l)
+    nblocks = n // ROWS
+    partials = pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((nblocks, 4), jnp.uint32),
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((ROWS, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 4), lambda i: (i, 0)),
+        interpret=interpret,
+    )(words)
+    return jnp.sum(partials, axis=0, dtype=jnp.uint32)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fingerprint kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.checksum.fingerprint import P1, P2, P3, P4
+
+
+def fingerprint_u32_ref(words: jax.Array) -> jax.Array:
+    """words: (N, 128) uint32 -> (4,) uint32 digest (same math, no tiling)."""
+    x = words.reshape(-1)
+    pos = jnp.arange(x.shape[0], dtype=jnp.uint32)
+    w = pos * P1 + P2
+    l0 = jnp.sum(x * w, dtype=jnp.uint32)
+    l1 = jnp.sum((x ^ P3) * (w ^ P4), dtype=jnp.uint32)
+    l2 = jnp.sum((x * x + P4) * w, dtype=jnp.uint32)
+    l3 = jnp.sum((x + pos) * (pos * P3 + P1), dtype=jnp.uint32)
+    return jnp.stack([l0, l1, l2, l3])

@@ -1,0 +1,1 @@
+from repro.kernels.fused_ce.ops import fused_cross_entropy  # noqa: F401

@@ -1,0 +1,28 @@
+"""Oracle for the SSD kernel: the pure-jnp chunked scan from models/ssm.py
+(itself validated against the O(L) sequential recurrence in tests)."""
+from repro.models.ssm import ssd_chunked as ssd_chunked_ref  # noqa: F401
+
+
+def ssd_sequential_ref(x, dt, a, b, c):
+    """O(L) sequential recurrence — the ground-truth semantics."""
+    import jax
+    import jax.numpy as jnp
+
+    bs, l, h, p = x.shape
+    n = b.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp          # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt * a[None, :])                      # (B,H)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dtt, bt, xt)
+        state = state * decay[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", ct, state)
+        return state, y
+
+    s0 = jnp.zeros((bs, h, p, n), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          b.transpose(1, 0, 2).astype(jnp.float32),
+          c.transpose(1, 0, 2).astype(jnp.float32))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), final

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: naive masked softmax attention (full materialization)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def swa_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                      window: int = 0) -> jax.Array:
+    """q,k,v: (BH, S, D) (same seq); causal + optional sliding window."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(d)
+    sq, sk = q.shape[1], k.shape[1]
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    mask = kp <= qp
+    if window > 0:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

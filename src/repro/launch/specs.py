@@ -1,0 +1,83 @@
+"""Abstract input specs (ShapeDtypeStruct) for every (arch x shape) pair.
+
+These are the dry-run stand-ins: weak-type-correct, shardable, and never
+allocated.  ``input_specs`` covers the model inputs (tokens/labels plus the
+stubbed modality embeddings); ``state_specs``/``decode_specs`` cover the
+train/serve state trees via ``jax.eval_shape``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig, get_shape
+from repro.models import init_decode_state
+from repro.models.frontend import extra_inputs_spec
+from repro.training.state import init_train_state
+
+SWA_VARIANT_WINDOW = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class PairPlan:
+    """What a given (arch, shape) pair lowers."""
+    cfg: ModelConfig
+    shape: ShapeConfig
+    kind: str                 # train | prefill | decode
+    swa_variant: bool         # dense arch long-context via documented SWA
+    skip_reason: Optional[str] = None
+
+
+def plan_pair(arch: str, shape_name: str) -> PairPlan:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    swa_variant = False
+    skip = None
+    if shape.name == "long_500k":
+        if cfg.arch_type == "audio":
+            skip = ("enc-dec decoder semantics cap at encoder-conditioned "
+                    "transcription; 524k-token decode is meaningless "
+                    "(DESIGN.md §4)")
+        elif cfg.arch_type in ("ssm",):
+            pass                      # recurrent state: natively O(1)
+        elif cfg.sliding_window:
+            pass                      # native SWA (danube, zamba2 shared blk)
+        else:
+            # dense/moe/vlm: documented sliding-window variant
+            cfg = dataclasses.replace(cfg, sliding_window=SWA_VARIANT_WINDOW)
+            swa_variant = True
+    return PairPlan(cfg=cfg, shape=shape, kind=shape.kind,
+                    swa_variant=swa_variant, skip_reason=skip)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStructs for the batch consumed by train/prefill steps."""
+    g, s = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((g, s), jnp.int32),
+    }
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((g, s), jnp.int32)
+    specs.update(extra_inputs_spec(cfg, g, dtype=jnp.bfloat16))
+    if shape.kind == "decode":
+        # decode consumes one token per sequence + the cache state
+        specs = {"token": jax.ShapeDtypeStruct((g,), jnp.int32)}
+    return specs
+
+
+def state_specs(cfg: ModelConfig, tcfg: TrainConfig):
+    """Abstract TrainState via eval_shape (no allocation)."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(
+        lambda k: init_train_state(cfg, tcfg, k), key)
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Abstract decode state (KV/SSM caches at seq_len)."""
+    return jax.eval_shape(
+        lambda: init_decode_state(cfg, shape.global_batch, shape.seq_len,
+                                  dtype=jnp.bfloat16))

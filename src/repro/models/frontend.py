@@ -1,0 +1,37 @@
+"""Modality frontend STUBS (the one allowed carve-out).
+
+[audio] and [vlm] architectures specify the transformer backbone only; the
+mel-spectrogram+conv codec / ViT vision encoder are stubbed: these helpers
+produce (or spec) precomputed frame/patch embeddings of the right shape.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def extra_inputs_spec(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> Dict:
+    """ShapeDtypeStructs for modality inputs consumed by the backbone."""
+    if cfg.arch_type == "vlm":
+        return {"image_embeds": jax.ShapeDtypeStruct(
+            (batch, cfg.vlm.num_image_tokens, cfg.vlm.image_embed_dim), dtype)}
+    if cfg.arch_type == "audio":
+        return {"encoder_frames": jax.ShapeDtypeStruct(
+            (batch, cfg.encdec.encoder_seq, cfg.d_model), dtype)}
+    return {}
+
+
+def synth_extra_inputs(cfg: ModelConfig, batch: int, key: jax.Array,
+                       dtype=jnp.float32) -> Dict:
+    """Concrete synthetic embeddings for smoke tests / examples."""
+    specs = extra_inputs_spec(cfg, batch, dtype)
+    out = {}
+    for name, spec in specs.items():
+        key, sub = jax.random.split(key)
+        out[name] = (0.02 * jax.random.normal(sub, spec.shape, jnp.float32)
+                     ).astype(dtype)
+    return out

@@ -1,0 +1,183 @@
+"""Mixture-of-Experts layer: top-k router + expert-parallel dispatch.
+
+TPU-native layout (DESIGN.md §5): token activations are sharded over the
+batch axes and replicated over "model"; expert weights are sharded over
+"model".  Dispatch runs inside ``shard_map``: each model shard selects the
+tokens routed to ITS experts, scatters them into local capacity buffers
+(purely local — no SPMD scatter partitioning), runs the expert FFN, and the
+per-shard partial outputs combine with one ``psum`` over "model" — the MoE
+collective the roofline tracks.  Outside a mesh the same code runs with a
+single shard (CPU smoke tests).
+
+Router load-balance auxiliary loss follows Switch/Mixtral practice.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoEConfig
+from repro.models.common import dense_init
+from repro.models.mlp import init_mlp, mlp_forward
+from repro.parallel.constraints import BATCH, MODEL, constrain, current_mesh
+
+EXPERT_PAD = 16   # pad expert count to a multiple of the model-axis size so
+                  # expert weights shard expert-parallel (granite: 40->48)
+
+# §Perf toggle: fuse the wi/wg up-projections into one matmul over
+# concatenated weights — the capacity buffer is then read ONCE instead of
+# twice per expert FFN (memory-bound MoE lever).
+FUSED_GATE = False
+
+
+def init_moe(key, d_model: int, d_ff: int, kind: str, moe: MoEConfig,
+             dtype=jnp.float32) -> Dict:
+    kr, ke, ks = jax.random.split(key, 3)
+    e, f = moe.num_experts, d_ff
+    out_scale = 0.02 / math.sqrt(2.0)
+    keys = jax.random.split(ke, 3)
+    params = {
+        "router": dense_init(kr, (d_model, e), dtype=dtype),
+        # stacked expert weights: (E, d, f) / (E, f, d)
+        "wi": dense_init(keys[0], (e, d_model, f), dtype=dtype),
+        "wo": dense_init(keys[2], (e, f, d_model), scale=out_scale, dtype=dtype),
+    }
+    if kind == "swiglu":
+        params["wg"] = dense_init(keys[1], (e, d_model, f), dtype=dtype)
+    if moe.shared_expert_ff:
+        params["shared"] = init_mlp(ks, d_model, moe.shared_expert_ff, kind, dtype)
+    return params
+
+
+def router_topk(logits: jax.Array, top_k: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """logits (T, E) -> (weights (T,k), indices (T,k), aux load-balance loss)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = jax.lax.top_k(probs, top_k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    # Switch-style aux loss: E * sum_e f_e * p_e
+    e = logits.shape[-1]
+    me = jnp.mean(probs, axis=0)                                   # mean router prob
+    onehot = jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32)       # top-1 assignment
+    ce = jnp.mean(onehot, axis=0)                                  # fraction of tokens
+    aux = e * jnp.sum(me * ce)
+    return w, idx, aux
+
+
+def _local_expert_ffn(xf, idx, weights, wi, wg, wo, *, k: int,
+                      capacity: int, kind: str, e_offset,
+                      axis_name: Optional[str]):
+    """Per-shard dispatch + FFN + combine contribution.
+
+    xf: (tl, d) local tokens; idx/weights: (tl, k) GLOBAL expert routing;
+    wi/wg/wo: this shard's experts (e_loc, ...).  Returns (tl, d) partial
+    output (sum over local experts); caller psums over the model axis.
+    """
+    tl, d = xf.shape
+    e_loc = wi.shape[0]
+    flat_idx = idx.reshape(-1) - e_offset                     # (tl*k,) local
+    mine = (flat_idx >= 0) & (flat_idx < e_loc)
+    safe_idx = jnp.where(mine, flat_idx, 0)
+    onehot = jax.nn.one_hot(safe_idx, e_loc, dtype=jnp.int32) \
+        * mine[:, None].astype(jnp.int32)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1,
+                              safe_idx[:, None], axis=1)[:, 0]
+    keep = mine & (pos < capacity)
+    safe_e = jnp.where(keep, safe_idx, 0)
+    safe_p = jnp.where(keep, pos, 0)
+
+    xk = jnp.repeat(xf, k, axis=0)                            # (tl*k, d)
+    contrib = jnp.where(keep[:, None], xk, 0)
+    buf = jnp.zeros((e_loc, capacity, d), xf.dtype)
+    buf = buf.at[safe_e, safe_p].add(contrib)                 # local scatter
+
+    if kind == "swiglu" and FUSED_GATE:
+        wcat = jnp.concatenate([wi, wg], axis=-1).astype(xf.dtype)
+        hg = jnp.einsum("ecd,edf->ecf", buf, wcat)
+        f = wi.shape[-1]
+        h = jax.nn.silu(hg[..., f:]) * hg[..., :f]
+    else:
+        h = jnp.einsum("ecd,edf->ecf", buf, wi.astype(xf.dtype))
+        if kind == "swiglu":
+            g = jnp.einsum("ecd,edf->ecf", buf, wg.astype(xf.dtype))
+            h = jax.nn.silu(g) * h
+        else:
+            h = jax.nn.gelu(h)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, wo.astype(xf.dtype))
+
+    gathered = out_buf[safe_e, safe_p]                        # (tl*k, d)
+    wk = (weights.reshape(-1) * keep).astype(xf.dtype)
+    out = jnp.sum((gathered * wk[:, None]).reshape(tl, k, d), axis=1)
+    if axis_name is not None:
+        out = jax.lax.psum(out, axis_name)                    # combine experts
+    return out
+
+
+def moe_forward(params: Dict, x: jax.Array, kind: str, moe: MoEConfig
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = moe.num_experts, moe.top_k
+    epad = (-e) % EXPERT_PAD
+    xf = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xf, params["router"].astype(x.dtype))
+    if epad:
+        # padded experts: -inf router logits — never selected, zero flow
+        logits = jnp.pad(logits, ((0, 0), (0, epad)), constant_values=-1e30)
+    e_tot = e + epad
+    weights, idx, aux = router_topk(logits, k)
+    weights = weights.astype(x.dtype)
+
+    def padw(name):
+        w = params[name]
+        if epad:
+            w = jnp.pad(w, ((0, epad),) + ((0, 0),) * (w.ndim - 1))
+        return w
+
+    wi, wo = padw("wi"), padw("wo")
+    wg = padw("wg") if "wg" in params else wi  # unused for gelu
+
+    mesh = current_mesh()
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh else {}
+    m = sizes.get("model", 1)
+    batch_axes = tuple(a for a in BATCH if sizes.get(a, 1) > 1)
+    n_batch = 1
+    for a in batch_axes:
+        n_batch *= sizes[a]
+
+    if mesh is not None and m > 1 and e_tot % m == 0 and t % n_batch == 0:
+        tl = t // n_batch
+        capacity = max(int(math.ceil(tl * k / e_tot * moe.capacity_factor)), k)
+        bspec = batch_axes if len(batch_axes) > 1 else \
+            (batch_axes[0] if batch_axes else None)
+
+        def shard_fn(xf_l, idx_l, w_l, wi_l, wg_l, wo_l):
+            e_loc = wi_l.shape[0]
+            e_off = jax.lax.axis_index("model") * e_loc
+            out = _local_expert_ffn(
+                xf_l, idx_l, w_l, wi_l, wg_l, wo_l, k=k,
+                capacity=capacity, kind=kind, e_offset=e_off,
+                axis_name="model")
+            return out
+
+        out = jax.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(bspec, None), P(bspec, None), P(bspec, None),
+                      P("model", None, None), P("model", None, None),
+                      P("model", None, None)),
+            out_specs=P(bspec, None))(xf, idx, weights, wi, wg, wo)
+    else:
+        capacity = max(int(math.ceil(t * k / e_tot * moe.capacity_factor)), k)
+        out = _local_expert_ffn(xf, idx, weights, wi, wg, wo, k=k,
+                                capacity=capacity, kind=kind,
+                                e_offset=jnp.int32(0), axis_name=None)
+
+    out = constrain(out, BATCH, None)
+    if "shared" in params:
+        out = out + mlp_forward(params["shared"], xf[None], kind)[0]
+    return out.reshape(b, s, d), aux * moe.router_aux_weight

@@ -1,0 +1,6 @@
+from repro.optim.adamw import adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedule import lr_schedule  # noqa: F401
+from repro.optim.zero import (  # noqa: F401
+    partial_shard_specs,
+    validate_partial_sharding,
+)

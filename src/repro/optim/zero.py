@@ -1,0 +1,89 @@
+"""ZeRO partial sharding (paper §5.4).
+
+The paper decouples the ZeRO *sharding factor* (minimum needed to fit the
+model) from the *data-parallelism degree* (for parallelism).  If DP = k ×
+shard_factor, the job can be scaled down / time-sliced up to k-way: only
+replicas of the SAME ZeRO shard are spliced together, so the splicing
+invariants (identical P/O buffers across resident ranks) hold.
+
+In JAX the optimizer state is sharded via PartitionSpec over the "data"
+mesh axis with the partial factor expressed as a sub-axis split; here we
+provide (a) the placement rule used by the elastic runtime and (b) the
+partition-spec builder used by the launcher.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def shard_group(rank: int, dp_degree: int, shard_factor: int) -> int:
+    """Which ZeRO shard a DP rank holds.
+
+    Ranks are assigned round-robin so that ranks {i, i+shard_factor, ...}
+    hold the same shard — the groups that may be spliced together.
+    """
+    assert dp_degree % shard_factor == 0, (dp_degree, shard_factor)
+    return rank % shard_factor
+
+
+def spliceable_groups(dp_degree: int, shard_factor: int) -> List[List[int]]:
+    """Groups of DP ranks holding identical optimizer shards (spliceable)."""
+    return [[r for r in range(dp_degree) if shard_group(r, dp_degree, shard_factor) == g]
+            for g in range(shard_factor)]
+
+
+def max_splice_factor(dp_degree: int, shard_factor: int) -> int:
+    """Paper: DP = k x shard_factor supports up to k-way time-slicing."""
+    assert dp_degree % shard_factor == 0
+    return dp_degree // shard_factor
+
+
+def validate_partial_sharding(dp_degree: int, shard_factor: int,
+                              target_splice: int) -> None:
+    """Refuse a resize that would splice ranks of different ZeRO shards."""
+    k = max_splice_factor(dp_degree, shard_factor)
+    if target_splice > k:
+        raise ValueError(
+            f"cannot splice {target_splice}-way: ZeRO shard factor "
+            f"{shard_factor} with DP={dp_degree} supports at most {k}-way "
+            f"time-slicing (paper §5.4 partial sharding)")
+
+
+def partial_shard_specs(params: Any, shard_factor: int,
+                        data_axis: str = "data") -> Any:
+    """PartitionSpecs sharding optimizer state over a sub-slice of the data
+    axis.  shard_factor=1 -> fully replicated optimizer state (pure DP);
+    shard_factor=dp -> fully sharded (classic ZeRO-1).
+
+    We shard each tensor's largest divisible axis over the data axis.
+    """
+    def spec_for(leaf) -> P:
+        if shard_factor == 1 or not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return P()
+        shape = leaf.shape
+        # largest axis divisible by shard factor
+        cands = [(dim, ax) for ax, dim in enumerate(shape)
+                 if dim % shard_factor == 0]
+        if not cands:
+            return P()
+        _, ax = max(cands)
+        spec = [None] * leaf.ndim
+        spec[ax] = data_axis
+        return P(*spec)
+
+    return jax.tree_util.tree_map(spec_for, params)
+
+
+def shard_slice(leaf: np.ndarray, spec: P, shard_idx: int, shard_factor: int):
+    """Host-side slice of a leaf for a given ZeRO shard (checkpoint layout)."""
+    for ax, name in enumerate(spec):
+        if name is not None:
+            n = leaf.shape[ax] // shard_factor
+            sl = [slice(None)] * leaf.ndim
+            sl[ax] = slice(shard_idx * n, (shard_idx + 1) * n)
+            return leaf[tuple(sl)]
+    return leaf

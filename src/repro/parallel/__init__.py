@@ -1,0 +1,6 @@
+from repro.parallel.sharding import (  # noqa: F401
+    batch_specs,
+    decode_state_specs,
+    param_specs,
+    to_shardings,
+)

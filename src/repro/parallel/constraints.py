@@ -1,0 +1,67 @@
+"""In-graph sharding constraints for model internals.
+
+XLA's sharding propagation loses the head/FFN partitioning through the
+reshapes and scans inside blockwise attention, MoE dispatch and the SSD
+blocks (observed: replicated attention-score buffers and spurious
+score all-reduces on the 16x16 mesh).  These helpers pin the intended
+layout at the tensor level.
+
+``constrain`` is a no-op outside a mesh context (CPU smoke tests) and
+silently drops axes that don't divide the dimension, so model code can
+state intent unconditionally.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+BATCH = ("pod", "data")      # global-batch sharding axes
+MODEL = "model"
+
+# §Perf toggle (paired with param_specs profile="replicate_model"): drop
+# "model" from activation constraints so small models run pure-DP.
+DISABLE_MODEL_CONSTRAINTS = False
+
+
+def current_mesh():
+    from jax._src import mesh as mesh_lib
+    m = mesh_lib.thread_resources.env.physical_mesh
+    return None if m is None or m.empty else m
+
+
+def constrain(x: jax.Array, *spec: Axis) -> jax.Array:
+    """with_sharding_constraint under the ambient mesh, with divisibility
+    and axis-existence guards.  spec entries: None | axis | tuple of axes."""
+    mesh = current_mesh()
+    if mesh is None or not hasattr(x, "shape") or x.ndim != len(spec):
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    clean = []
+    for dim, s in zip(x.shape, spec):
+        if s is None:
+            clean.append(None)
+            continue
+        if DISABLE_MODEL_CONSTRAINTS and s == MODEL:
+            clean.append(None)
+            continue
+        axes = (s,) if isinstance(s, str) else tuple(s)
+        axes = tuple(a for a in axes if sizes.get(a, 1) > 1)
+        total = int(np.prod([sizes[a] for a in axes])) if axes else 1
+        if not axes or total <= 1 or dim % total != 0 or dim < total:
+            # try dropping the leading axis (e.g. pod) for partial fit
+            if len(axes) > 1:
+                sub = axes[1:]
+                t2 = int(np.prod([sizes[a] for a in sub]))
+                if dim % t2 == 0 and dim >= t2:
+                    clean.append(sub if len(sub) > 1 else sub[0])
+                    continue
+            clean.append(None)
+            continue
+        clean.append(axes if len(axes) > 1 else axes[0])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*clean)))

@@ -1,0 +1,240 @@
+"""Sharding rules for the production meshes.
+
+Mesh axes: ``("data", "model")`` single-pod (16 x 16) or
+``("pod", "data", "model")`` multi-pod (2 x 16 x 16).
+
+Strategy (DESIGN.md §5):
+- Parameters & optimizer state: FSDP-style — "model" on the natural
+  tensor-parallel dim (heads / FFN / experts / vocab) and "data" on the
+  largest remaining divisible dim; replicated across "pod" (pods are pure
+  DP; gradient all-reduce crosses the pod axis).
+- Batch: sharded over ("pod", "data").
+- Decode caches: batch dim over ("pod", "data") when divisible; heads/
+  head_dim over "model" when divisible.
+- Stacked per-layer leading axes (lax.scan over layers) are never sharded.
+
+The rules are divisibility-driven rather than name-driven so every assigned
+architecture (GQA with 4 kv heads, 40-expert MoE, SSD heads...) lowers
+without special cases; names only mark stacked leading dims.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# markers for stacked per-layer leading axes (appear ANYWHERE in the path —
+# optimizer state nests the param tree under ['m']/['v'])
+STACKED_MARKERS = ("['blocks']", "['cross']")
+
+
+def _axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _assign(shape: Tuple[int, ...], start: int, mesh: Mesh,
+            prefer_last_for_model: bool = True) -> list:
+    """Greedy: 'model' on the best divisible dim (preferring trailing dims,
+    where the tensor-parallel reduction lives), then 'data' on the largest
+    remaining divisible dim."""
+    sizes = _axis_sizes(mesh)
+    model = sizes.get("model", 1)
+    data = sizes.get("data", 1)
+    spec: list = [None] * len(shape)
+
+    dims = list(range(start, len(shape)))
+    if model > 1:
+        order = sorted(dims, key=lambda i: (-int(shape[i] % model == 0), -i))
+        for i in order:
+            if shape[i] % model == 0 and shape[i] >= model:
+                spec[i] = "model"
+                break
+    if data > 1:
+        cands = [i for i in dims if spec[i] is None
+                 and shape[i] % data == 0 and shape[i] >= data]
+        if cands:
+            i = max(cands, key=lambda i: shape[i])
+            spec[i] = "data"
+    return spec
+
+
+def _named_param_spec(pstr: str, shape: Tuple[int, ...], start: int,
+                      mesh: Mesh) -> Optional[list]:
+    """Megatron-convention tensor-parallel placement by parameter name:
+    column-parallel up-projections shard the output dim over "model",
+    row-parallel down-projections shard the CONTRACTED dim over "model"
+    (matching the activation sharding the model pins via constraints).
+    Remaining capacity shards over "data" (FSDP).  Returns None when the
+    name has no rule (generic fallback applies)."""
+    sizes = _axis_sizes(mesh)
+    model, data = sizes.get("model", 1), sizes.get("data", 1)
+    dims = shape[start:]
+    nd = len(dims)
+    spec = [None] * nd
+
+    def fits(i, n):
+        return dims[i] % n == 0 and dims[i] >= n
+
+    def put(i, axis, n):
+        if spec[i] is None and n > 1 and fits(i, n):
+            spec[i] = axis
+            return True
+        return False
+
+    import re as _re
+    keys = _re.findall(r"\['([^']+)'\]", pstr)
+    name = keys[-1] if keys else ""
+    in_attn = "'attn'" in pstr
+    in_moe = "'moe'" in pstr or "'shared'" in pstr
+
+    matched = True
+    if in_attn and name in ("wq", "wk", "wv") and nd == 3:
+        put(1, "model", model)          # heads
+        put(0, "data", data)            # d_model
+    elif in_attn and name == "wo" and nd == 3:
+        put(0, "model", model)          # heads (contracted)
+        put(2, "data", data)            # d_model
+    elif in_moe and name in ("wi", "wg", "wo") and nd == 3:
+        # (E, d, f) / (E, f, d): experts over model when divisible,
+        # else the FFN dim; data on the remaining big dim
+        if not put(0, "model", model):
+            ffn_dim = 2 if name in ("wi", "wg") else 1
+            put(ffn_dim, "model", model)
+        other = 2 if spec[2] is None else 1
+        put(other, "data", data)
+    elif name in ("wi", "wg") and nd == 2:
+        put(1, "model", model)          # d_ff (column-parallel)
+        put(0, "data", data)
+    elif name == "wo" and nd == 2:
+        put(0, "model", model)          # d_ff (row-parallel, contracted)
+        put(1, "data", data)
+    elif name == "router" and nd == 2:
+        put(0, "data", data)
+    elif name == "in_proj" and nd == 2:
+        put(1, "model", model)          # fused z/x/B/C/dt outputs
+        put(0, "data", data)
+    elif name == "out_proj" and nd == 2:
+        put(0, "model", model)          # d_inner (contracted)
+        put(1, "data", data)
+    elif name == "conv_w" and nd == 2:
+        put(1, "data", data)
+    elif name == "embed" and nd == 2:
+        put(0, "model", model)          # vocab
+        put(1, "data", data)
+    elif name == "head" and nd == 2:
+        put(1, "model", model)          # vocab
+        put(0, "data", data)
+    elif name == "projector" and nd == 2:
+        put(0, "data", data)
+    else:
+        matched = False
+    if not matched:
+        return None
+    return [None] * start + spec
+
+
+def param_specs(params: Any, mesh: Mesh, profile: str = "default") -> Any:
+    """PartitionSpecs for a parameter/optimizer pytree (name-aware
+    tensor-parallel rules + generic divisibility fallback).
+
+    profile="replicate_model": no tensor parallelism — params replicated
+    over "model", sharded over "data" only (FSDP).  The right layout for
+    small models where per-chip TP work is dwarfed by the collectives it
+    introduces (mamba2-130m, whisper-base serving).
+    """
+    def spec_for(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        if not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return P()
+        start = 1 if any(m in pstr for m in STACKED_MARKERS) \
+            and leaf.ndim > 1 else 0
+        if profile == "replicate_model":
+            sizes = _axis_sizes(mesh)
+            data = sizes.get("data", 1)
+            spec = [None] * leaf.ndim
+            cands = [i for i in range(start, leaf.ndim)
+                     if leaf.shape[i] % data == 0 and leaf.shape[i] >= data]
+            if cands and data > 1:
+                spec[max(cands, key=lambda i: leaf.shape[i])] = "data"
+            return P(*spec)
+        named = _named_param_spec(pstr, leaf.shape, start, mesh)
+        if named is not None:
+            return P(*named)
+        return P(*_assign(leaf.shape, start, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def batch_specs(batch: Any, mesh: Mesh) -> Any:
+    """Batch leaves: leading (global-batch) dim over ("pod","data")."""
+    sizes = _axis_sizes(mesh)
+    daxes = tuple(a for a in ("pod", "data") if sizes.get(a, 1) > 1)
+    dsize = int(np.prod([sizes[a] for a in daxes])) if daxes else 1
+
+    def spec_for(leaf):
+        if not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return P()
+        if daxes and leaf.shape[0] % dsize == 0 and leaf.shape[0] >= dsize:
+            return P(daxes if len(daxes) > 1 else daxes[0])
+        # batch not divisible by pod*data: try data alone
+        if "data" in [a for a in daxes] and leaf.shape[0] % sizes["data"] == 0 \
+                and leaf.shape[0] >= sizes["data"]:
+            return P("data")
+        return P()
+
+    return jax.tree_util.tree_map(spec_for, batch)
+
+
+def decode_state_specs(state: Any, mesh: Mesh, batch: int,
+                       profile: str = "default") -> Any:
+    """Decode-state leaves: (L, B, ...) caches -> B over ("pod","data"),
+    heads/head_dim over "model".  profile="replicate_model": batch only."""
+    sizes = _axis_sizes(mesh)
+    daxes = tuple(a for a in ("pod", "data") if sizes.get(a, 1) > 1)
+    dsize = int(np.prod([sizes[a] for a in daxes])) if daxes else 1
+    model = sizes.get("model", 1)
+
+    def spec_for(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        if not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return P()
+        shape = leaf.shape
+        spec = [None] * leaf.ndim
+        # find the batch dim (first dim == batch after the stacked L dim)
+        bdim = None
+        for i, d in enumerate(shape[:2]):
+            if d == batch:
+                bdim = i
+                break
+        if bdim is not None and daxes and batch % dsize == 0 and batch >= dsize:
+            spec[bdim] = daxes if len(daxes) > 1 else daxes[0]
+        if profile == "replicate_model":
+            return P(*spec)
+        if model > 1:
+            if "kv" in pstr and leaf.ndim == 5 and bdim is not None:
+                # KV caches (L, B, C, KVH, HD): shard the CACHE-LENGTH dim
+                # over "model" — decode attends with a partial softmax over
+                # cache segments (small score all-reduces) instead of
+                # all-gathering the cache (few-KV-head GQA can't shard
+                # heads 16-way).
+                if shape[2] % model == 0 and shape[2] >= model:
+                    spec[2] = "model"
+                    return P(*spec)
+            # fallback: first divisible trailing dim
+            for i in range(len(shape) - 1, (bdim if bdim is not None else 0), -1):
+                if spec[i] is None and shape[i] % model == 0 \
+                        and shape[i] >= model:
+                    spec[i] = "model"
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, state)
+
+
+def to_shardings(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

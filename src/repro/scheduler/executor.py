@@ -1,0 +1,140 @@
+"""Fleet executor: the hierarchical scheduler driving REAL jobs.
+
+Where ``simulator.py`` models jobs as progress rates, this executor runs a
+miniature fleet of actual ``ElasticRuntime`` training jobs (reduced
+configs) and applies the ``ElasticPolicy``'s decisions through the REAL
+mechanisms: resize -> spliced-step swap; preempt -> in-graph barrier
+quiesce + content-deduped checkpoint; re-admit -> restore + resume.
+Figure 1's scopes as running code, on one host.
+
+Capacity is counted in "device slots"; each job's logical world size stays
+constant while its physical allocation follows the policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.configs import get_smoke_config
+from repro.configs.base import TrainConfig
+from repro.core.checkpoint import CheckpointStore
+from repro.core.elastic import ElasticRuntime
+from repro.core.migration import checkpoint_job
+from repro.core.sla import TIERS
+
+
+@dataclasses.dataclass
+class ManagedJob:
+    id: str
+    tier: str
+    arch: str
+    world_size: int            # logical (constant) = demanded devices
+    total_steps: int
+    runtime: Optional[ElasticRuntime] = None
+    allocated: int = 0
+    done: bool = False
+    preemptions: int = 0
+    resizes: int = 0
+    steps_done: int = 0
+
+    def demand(self) -> int:
+        return self.world_size
+
+
+class FleetExecutor:
+    """A single-host fleet of real elastic jobs under tiered scheduling."""
+
+    def __init__(self, total_slots: int, seed: int = 0):
+        self.total_slots = total_slots
+        self.jobs: Dict[str, ManagedJob] = {}
+        self.store = CheckpointStore()
+        self.log: List[Dict] = []
+
+    # ------------------------------------------------------------ admission
+    def submit(self, job: ManagedJob, global_batch: int = 8,
+               seq_len: int = 32) -> None:
+        cfg = get_smoke_config(job.arch)
+        tcfg = TrainConfig(total_steps=job.total_steps, warmup_steps=1,
+                           learning_rate=1e-3)
+        job.runtime = ElasticRuntime(cfg, tcfg, job.world_size,
+                                     job.world_size, global_batch, seq_len)
+        job._cfg, job._tcfg = cfg, tcfg
+        job._gb, job._sl = global_batch, seq_len
+        self.jobs[job.id] = job
+
+    # ------------------------------------------------------------ policy
+    def _decide(self) -> Dict[str, int]:
+        """Tiered allocation over slot capacity (premium first, FIFO),
+        shrink-before-preempt via splice divisors."""
+        active = [j for j in self.jobs.values() if not j.done]
+        order = sorted(active,
+                       key=lambda j: -TIERS[j.tier].preempt_priority)
+        alloc: Dict[str, int] = {j.id: 0 for j in active}
+        free = self.total_slots
+        for j in order:
+            give = min(j.demand(), free)
+            # physical must divide world size: largest divisor <= give
+            while give > 0 and j.world_size % give != 0:
+                give -= 1
+            alloc[j.id] = give
+            free -= give
+        return alloc
+
+    def _apply(self, alloc: Dict[str, int]) -> None:
+        for jid, target in alloc.items():
+            job = self.jobs[jid]
+            if job.done:
+                continue
+            if target == job.allocated:
+                continue
+            if target == 0 and job.allocated > 0:
+                # REAL preemption: in-graph barrier quiesce + checkpoint
+                job.runtime.request_preemption()
+                job.runtime.run_steps(2, stop_on_barrier=True)
+                job.steps_done = int(job.runtime.state["step"])
+                checkpoint_job(job.runtime, self.store, jid)
+                job.runtime = None
+                job.preemptions += 1
+                self.log.append({"event": "preempt", "job": jid})
+            elif target > 0 and job.allocated == 0 and job.runtime is None:
+                # REAL re-admission: restore from the deduped store
+                device, host, step = self.store.restore(jid)
+                job.runtime = ElasticRuntime.from_snapshot(
+                    job._cfg, job._tcfg,
+                    {"state": device[0], "pipeline": host[0]["pipeline"],
+                     "world_size": host[0]["world_size"]},
+                    target, job._gb, job._sl)
+                assert int(job.runtime.state["step"]) == job.steps_done
+                self.log.append({"event": "restore", "job": jid,
+                                 "at_step": step})
+            elif target > 0 and job.runtime is not None:
+                if job.runtime.physical != target:
+                    job.runtime.resize(target)  # REAL transparent resize
+                    if job.allocated > 0:       # admission is not a resize
+                        job.resizes += 1
+                        self.log.append({"event": "resize", "job": jid,
+                                         "to": target})
+            job.allocated = target
+
+    # ------------------------------------------------------------ run
+    def tick(self, steps: int = 1) -> None:
+        """One scheduling round: decide, apply, advance running jobs."""
+        self._apply(self._decide())
+        for job in self.jobs.values():
+            if job.done or job.runtime is None or job.allocated == 0:
+                continue
+            job.runtime.run_steps(steps)
+            job.steps_done = int(job.runtime.state["step"])
+            if job.steps_done >= job.total_steps:
+                job.done = True
+                job.allocated = 0
+                job.runtime = None
+                self.log.append({"event": "done", "job": job.id,
+                                 "steps": job.steps_done})
+
+    def run(self, max_ticks: int = 100) -> List[Dict]:
+        for _ in range(max_ticks):
+            if all(j.done for j in self.jobs.values()):
+                break
+            self.tick()
+        return self.log

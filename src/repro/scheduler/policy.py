@@ -1,0 +1,181 @@
+"""Scheduling policies.
+
+``ElasticPolicy`` is Singularity's: every job is preemptible, migratable and
+elastic, so the scheduler (a) never leaves capacity idle while work is
+queued (opportunistic scale-up of running jobs / admission of basic jobs
+anywhere in the fleet), (b) shrinks before it preempts, preempts strictly
+by tier, (c) defragments by migrating small jobs to open contiguous
+capacity for large arrivals, all while respecting GPU-fraction SLAs.
+
+``StaticGangPolicy`` is the status-quo baseline: jobs are gang-scheduled at
+full demand in FIFO order, never preempted, never resized — the comparison
+that motivates the paper (§1: utilization/idling).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.sla import TIERS
+from repro.scheduler.types import Cluster, Fleet, Job
+
+
+def _tier_key(j: Job) -> Tuple[int, float]:
+    # preemption order: basic first, then standard, then premium; later
+    # arrivals preempted before earlier ones
+    return (TIERS[j.tier].preempt_priority, -j.arrival)
+
+
+@dataclasses.dataclass
+class Decision:
+    """Target allocation for the next interval: job -> (gpus, cluster)."""
+    alloc: Dict[str, Tuple[int, Optional[str]]]
+    preemptions: List[str]
+    migrations: List[str]
+
+
+class StaticGangPolicy:
+    """FIFO gang scheduling without preemption/elasticity."""
+
+    name = "static"
+
+    def decide(self, now: float, jobs: List[Job], fleet: Fleet) -> Decision:
+        free = {c.id: c.total_gpus for c in fleet.clusters()}
+        for j in jobs:
+            if j.done_at is None and j.allocated > 0:
+                free[j.cluster] -= j.allocated
+        alloc: Dict[str, Tuple[int, Optional[str]]] = {}
+        for j in sorted(jobs, key=lambda j: j.arrival):
+            if j.done_at is not None:
+                continue
+            if j.allocated > 0:
+                alloc[j.id] = (j.allocated, j.cluster)   # never touched again
+                continue
+            # admit only if some cluster fits the FULL demand
+            for cid, f in free.items():
+                if f >= j.demand_gpus:
+                    alloc[j.id] = (j.demand_gpus, cid)
+                    free[cid] -= j.demand_gpus
+                    break
+            else:
+                alloc[j.id] = (0, None)
+        return Decision(alloc=alloc, preemptions=[], migrations=[])
+
+
+class ElasticPolicy:
+    """Singularity's policy: SLA-tiered, shrink-before-preempt, elastic
+    expansion into spare capacity, migration-based defragmentation."""
+
+    name = "elastic"
+
+    def __init__(self, expand_factor: float = 2.0):
+        self.expand_factor = expand_factor
+
+    # -- helpers ---------------------------------------------------------
+    def _required(self, now: float, j: Job) -> int:
+        """GPUs needed this interval to keep the job's hourly SLA safe."""
+        tier = TIERS[j.tier]
+        if tier.gpu_fraction <= 0:
+            return 0                       # basic: best effort
+        # fraction delivered so far this window; demand enough to stay above
+        headroom = j.account.headroom(now)
+        if headroom > 0.1:
+            # comfortably above guarantee -> can run shrunk this interval
+            # (with a margin so the hourly window stays safe)
+            frac = min(1.0, tier.gpu_fraction + 0.1)
+            return max(j.min_gpus, int(j.demand_gpus * frac))
+        return j.demand_gpus
+
+    def decide(self, now: float, jobs: List[Job], fleet: Fleet) -> Decision:
+        active = [j for j in jobs if j.done_at is None and j.arrival <= now]
+        total = fleet.total()
+        alloc: Dict[str, int] = {j.id: 0 for j in active}
+        preempted: List[str] = []
+
+        # 1. guaranteed tier demands, premium first, FIFO within tier.
+        #    All-or-nothing per job: under overload it is better to run
+        #    fewer jobs at guaranteed speed than all jobs too slow to meet
+        #    any SLA (jobs skipped here queue with zero lost work).
+        by_guarantee = sorted(
+            active, key=lambda j: (-TIERS[j.tier].preempt_priority, j.arrival))
+        used = 0
+        for j in by_guarantee:
+            need = self._required(now, j)
+            if total - used >= need:
+                alloc[j.id] = need
+                used += need
+
+        # 2. top up to full demand, same order (partial top-ups are fine —
+        #    the guarantee slice is already safe)
+        for j in by_guarantee:
+            if alloc[j.id] == 0 and self._required(now, j) > 0:
+                continue        # not admitted this interval
+            want = j.demand_gpus - alloc[j.id]
+            give = min(want, total - used)
+            if give > 0:
+                alloc[j.id] += give
+                used += give
+
+        # 3. opportunistic expansion of elastic jobs into spare capacity —
+        #    only when the fleet has real slack (avoid fragmenting under load)
+        if total - used > 0.1 * total:
+            for j in sorted(active,
+                            key=lambda j: TIERS[j.tier].scaleup_priority):
+                if total - used <= 0:
+                    break
+                extra = min(int(j.demand_gpus * (self.expand_factor - 1)),
+                            total - used)
+                if extra > 0:
+                    alloc[j.id] += extra
+                    used += extra
+
+        # 4. enforce min_gpus (ZeRO partial-sharding floor): a job below its
+        #    floor is preempted instead (checkpointed, zero lost work)
+        for j in sorted(active, key=_tier_key):
+            if 0 < alloc[j.id] < j.min_gpus:
+                preempted.append(j.id)
+                alloc[j.id] = 0
+
+        # 5. placement: bin-pack descending into clusters; count migrations
+        placements, migrations = self._place(active, alloc, fleet)
+        final = {jid: (alloc[jid], placements.get(jid)) for jid in alloc}
+        return Decision(alloc=final, preemptions=preempted,
+                        migrations=migrations)
+
+    def _place(self, jobs: List[Job], alloc: Dict[str, int], fleet: Fleet
+               ) -> Tuple[Dict[str, str], List[str]]:
+        free = {c.id: c.total_gpus for c in fleet.clusters()}
+        placements: Dict[str, str] = {}
+        migrations: List[str] = []
+        # guaranteed tiers place first so basic absorbs fragmentation
+        order = sorted(jobs, key=lambda j: (
+            -TIERS[j.tier].preempt_priority, -alloc[j.id]))
+        # keep existing placement when it still fits (avoid gratuitous moves)
+        for j in order:
+            g = alloc[j.id]
+            if g == 0:
+                continue
+            if j.cluster and free.get(j.cluster, 0) >= g:
+                placements[j.id] = j.cluster
+                free[j.cluster] -= g
+        for j in order:
+            g = alloc[j.id]
+            if g == 0 or j.id in placements:
+                continue
+            # defrag: pick the cluster with the most free capacity
+            cid = max(free, key=free.get)
+            if free[cid] < g:
+                # cannot fit contiguously anywhere -> shrink to the biggest
+                # hole, but never below the ZeRO splice floor (§5.4): below
+                # that the job is preempted (checkpointed, zero lost work)
+                g = free[cid]
+                if g < j.min_gpus:
+                    g = 0
+                alloc[j.id] = g
+                if g == 0:
+                    continue
+            placements[j.id] = cid
+            free[cid] -= g
+            if j.cluster is not None and j.cluster != cid:
+                migrations.append(j.id)      # transparent live migration
+        return placements, migrations

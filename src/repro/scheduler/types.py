@@ -1,0 +1,96 @@
+"""Fleet and job model for the planet-scale scheduler simulation."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.sla import GpuFractionAccount, TIERS
+
+
+@dataclasses.dataclass
+class Cluster:
+    id: str
+    region: str
+    total_gpus: int
+    free_gpus: int = -1
+
+    def __post_init__(self):
+        if self.free_gpus < 0:
+            self.free_gpus = self.total_gpus
+
+
+@dataclasses.dataclass
+class Region:
+    id: str
+    clusters: List[Cluster]
+
+    def total(self) -> int:
+        return sum(c.total_gpus for c in self.clusters)
+
+    def free(self) -> int:
+        return sum(c.free_gpus for c in self.clusters)
+
+
+@dataclasses.dataclass
+class Fleet:
+    regions: List[Region]
+
+    def total(self) -> int:
+        return sum(r.total() for r in self.regions)
+
+    def free(self) -> int:
+        return sum(r.free() for r in self.regions)
+
+    def clusters(self) -> List[Cluster]:
+        return [c for r in self.regions for c in r.clusters]
+
+
+@dataclasses.dataclass
+class Job:
+    """A training job: demands N GPUs of work ``gpu_hours`` total.
+
+    ``min_gpus`` encodes the ZeRO partial-sharding limit (§5.4): the job
+    cannot be spliced below demand/max_splice devices.  ``elastic`` and
+    ``preemptible`` are ALWAYS true in Singularity (the paper's point);
+    the static baseline policy ignores them.
+    """
+    id: str
+    tier: str                     # premium | standard | basic
+    demand_gpus: int
+    gpu_hours: float              # total work in (demand_gpus x hours)
+    arrival: float                # seconds
+    min_gpus: int = 1
+    splice_overhead: float = 0.03  # Fig-4 measured time-slicing overhead
+
+    # runtime state
+    allocated: int = 0
+    cluster: Optional[str] = None
+    progress: float = 0.0         # in [0, 1]
+    done_at: Optional[float] = None
+    preemptions: int = 0
+    migrations: int = 0
+    resizes: int = 0
+    account: GpuFractionAccount = None
+
+    def __post_init__(self):
+        assert self.tier in TIERS
+        if self.account is None:
+            self.account = GpuFractionAccount(self.tier, self.demand_gpus)
+
+    @property
+    def ideal_seconds(self) -> float:
+        return self.gpu_hours * 3600.0 / self.demand_gpus
+
+    def rate(self) -> float:
+        """Progress per second given current allocation (work-conserving
+        elasticity; scaled-down jobs pay the splicing overhead)."""
+        if self.allocated <= 0 or self.done_at is not None:
+            return 0.0
+        eff = min(self.allocated / self.demand_gpus, 2.0)
+        if self.allocated < self.demand_gpus:
+            eff *= (1.0 - self.splice_overhead)
+        return eff / self.ideal_seconds
+
+    def remaining_seconds(self) -> float:
+        r = self.rate()
+        return float("inf") if r <= 0 else (1.0 - self.progress) / r

@@ -1,0 +1,60 @@
+"""Batched serving engine: prefill + decode over the generic model API.
+
+Inference jobs are first-class in Singularity (the scheduler elastically
+shrinks training to absorb inference load, §1.1b); this engine is the
+serve-side workload driver.  It is also what ``serve_step`` dry-runs lower.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step_fn, init_params, prefill_fn
+from repro.models.frontend import synth_extra_inputs
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, seed: int = 0,
+                 params: Optional[dict] = None):
+        self.cfg = cfg
+        key = jax.random.PRNGKey(seed)
+        self.params = params if params is not None else init_params(cfg, key)
+        self._prefills = {}
+        self._decode = jax.jit(lambda p, s, t: decode_step_fn(p, s, t, cfg))
+        self._extra_key = jax.random.PRNGKey(seed + 7)
+
+    def _prefill(self, params, batch, cache_len: int):
+        if cache_len not in self._prefills:
+            cfg = self.cfg
+            self._prefills[cache_len] = jax.jit(
+                lambda p, b: prefill_fn(p, b, cfg, cache_len=cache_len))
+        return self._prefills[cache_len](params, batch)
+
+    def generate(self, prompts: jax.Array, max_new_tokens: int,
+                 temperature: float = 0.0, seed: int = 0) -> jax.Array:
+        """prompts: (B, S) int32 -> generated (B, max_new_tokens) int32."""
+        b = prompts.shape[0]
+        batch = {"tokens": prompts}
+        batch.update(synth_extra_inputs(self.cfg, b, self._extra_key))
+        logits, state = self._prefill(self.params, batch,
+                                      prompts.shape[1] + max_new_tokens)
+        key = jax.random.PRNGKey(seed)
+        out = []
+        tok = self._sample(logits, temperature, key)
+        out.append(tok)
+        for i in range(max_new_tokens - 1):
+            key, sub = jax.random.split(key)
+            logits, state = self._decode(self.params, state, tok)
+            tok = self._sample(logits, temperature, sub)
+            out.append(tok)
+        return jnp.stack(out, axis=1)
+
+    @staticmethod
+    def _sample(logits: jax.Array, temperature: float, key) -> jax.Array:
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / temperature, axis=-1).astype(jnp.int32)

@@ -1,0 +1,2 @@
+from repro.training.state import TrainState, init_train_state  # noqa: F401
+from repro.training.step import build_train_step  # noqa: F401

@@ -1,0 +1,29 @@
+"""Training state: the complete, checkpointable program state of a job.
+
+In the paper, CRIU snapshots the host address space so the job resumes at
+the exact program point.  In JAX the training program is functional: the
+ENTIRE program state is this pytree plus the data cursor — capturing it at
+a step boundary is exactly work-conserving (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import init_params
+from repro.optim.adamw import adamw_init
+
+TrainState = Dict[str, Any]
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig,
+                     key: jax.Array) -> TrainState:
+    params = init_params(cfg, key)
+    return {
+        "params": params,
+        "opt": adamw_init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,1 @@
+from repro.utils import constants, hashing, pytree  # noqa: F401

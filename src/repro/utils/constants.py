@@ -1,0 +1,21 @@
+"""Target-hardware constants (TPU v5e) used for roofline analysis.
+
+The container runs on CPU; these constants describe the TARGET so the
+dry-run roofline terms are physically meaningful.
+"""
+
+# per-chip peak
+PEAK_BF16_FLOPS = 197e12        # 197 TFLOP/s bf16
+HBM_BANDWIDTH = 819e9           # 819 GB/s
+ICI_LINK_BANDWIDTH = 50e9       # ~50 GB/s per link
+
+# production meshes
+SINGLE_POD_SHAPE = (16, 16)                 # ("data", "model") — 256 chips
+MULTI_POD_SHAPE = (2, 16, 16)               # ("pod", "data", "model") — 512 chips
+
+# migration/transfer modelling (paper Table 5): remote blob store bandwidth
+BLOB_STORE_BANDWIDTH = 2e9      # 2 GB/s effective to remote storage
+HOST_DEVICE_BANDWIDTH = 32e9    # host<->device staging
+
+VMEM_BYTES = 128 * 1024 * 1024  # v5e ~128 MiB VMEM (for BlockSpec sizing)
+HBM_BYTES = 16 * 1024**3        # v5e 16 GiB HBM per chip

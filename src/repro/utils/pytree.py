@@ -1,0 +1,55 @@
+"""Small pytree helpers used across the framework."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of all array leaves."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(np.prod(l.shape, dtype=np.int64) * np.dtype(l.dtype).itemsize
+               for l in leaves if hasattr(l, "shape"))
+
+
+def tree_count(tree: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(np.prod(l.shape, dtype=np.int64) for l in leaves
+                   if hasattr(l, "shape")))
+
+
+def tree_flatten_with_paths(tree: Any) -> List[Tuple[str, Any]]:
+    """Flatten a pytree to (dotted-path, leaf) pairs with stable ordering."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        out.append((jax.tree_util.keystr(path), leaf))
+    return out
+
+
+def tree_allclose(a: Any, b: Any, rtol: float = 1e-5, atol: float = 1e-6) -> bool:
+    la, sa = jax.tree_util.tree_flatten(a)
+    lb, sb = jax.tree_util.tree_flatten(b)
+    if sa != sb:
+        return False
+    return all(np.allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol)
+               for x, y in zip(la, lb))
+
+
+def tree_map_with_path(fn: Callable, tree: Any) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: fn(jax.tree_util.keystr(p), l), tree)
+
+
+def tree_equal(a: Any, b: Any) -> bool:
+    la, sa = jax.tree_util.tree_flatten(a)
+    lb, sb = jax.tree_util.tree_flatten(b)
+    if sa != sb:
+        return False
+    return all(np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+def named_leaves(tree: Any) -> Dict[str, Any]:
+    return dict(tree_flatten_with_paths(tree))

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run on the single real CPU device (the 512-device override is
+# strictly dryrun-only, per the assignment).
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,110 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward/
+train step + prefill/decode on CPU, asserting shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, get_smoke_config
+from repro.configs.base import TrainConfig
+from repro.models import (decode_step_fn, init_params, model_forward,
+                          prefill_fn)
+from repro.models.frontend import synth_extra_inputs
+from repro.training.state import init_train_state
+from repro.training.step import build_train_step
+
+B, S = 2, 64
+
+
+def _batch(cfg, key):
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    batch.update(synth_extra_inputs(cfg, B, key))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS + ["paper-gpt2-1.8b"])
+def test_forward_and_decode(arch, rng_key):
+    cfg = get_smoke_config(arch)
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    params = init_params(cfg, rng_key)
+    batch = _batch(cfg, rng_key)
+
+    loss, metrics = jax.jit(lambda p, b: model_forward(p, b, cfg))(
+        params, batch)
+    assert np.isfinite(float(loss))
+    assert float(metrics["tokens"]) == B * S
+
+    logits, state = jax.jit(lambda p, b: prefill_fn(p, b, cfg))(params, batch)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, state2 = jax.jit(
+        lambda p, s, t: decode_step_fn(p, s, t, cfg))(params, state, tok)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits2)))
+    assert int(state2["pos"]) == S + 1
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_one_train_step(arch, rng_key):
+    cfg = get_smoke_config(arch)
+    tcfg = TrainConfig(total_steps=10, warmup_steps=1)
+    state = init_train_state(cfg, tcfg, rng_key)
+    step = jax.jit(build_train_step(cfg, tcfg, splice=1))
+    batch = _batch(cfg, rng_key)
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(new_state["step"]) == 1
+    # params actually changed
+    p0 = jax.tree_util.tree_leaves(state["params"])[0]
+    p1 = jax.tree_util.tree_leaves(new_state["params"])[0]
+    assert not np.array_equal(np.asarray(p0), np.asarray(p1))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "olmo-1b": (16, 2048, 16, 16, 8192, 50304),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "yi-9b": (48, 4096, 32, 4, 11008, 64000),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+        "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected
+    if arch == "granite-moe-3b-a800m":
+        assert (cfg.moe.num_experts, cfg.moe.top_k) == (40, 8)
+    if arch == "qwen3-moe-30b-a3b":
+        assert (cfg.moe.num_experts, cfg.moe.top_k) == (128, 8)
+    if arch in ("zamba2-1.2b",):
+        assert cfg.ssm.state_dim == 64
+    if arch == "mamba2-130m":
+        assert cfg.ssm.state_dim == 128
+    assert cfg.source
+
+
+def test_param_counts_plausible():
+    """Analytic parameter counts land near the advertised sizes."""
+    approx = {
+        "yi-9b": (8.0e9, 10e9),
+        "granite-8b": (7.0e9, 9e9),
+        "qwen3-moe-30b-a3b": (25e9, 34e9),
+        "mamba2-130m": (0.10e9, 0.16e9),
+        "olmo-1b": (0.9e9, 1.4e9),
+    }
+    for arch, (lo, hi) in approx.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)

@@ -1,0 +1,68 @@
+"""Bidirectional allocator (§5.2.2): stable-address invariant."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.buffers import DeviceMemory, OutOfMemory
+
+
+@settings(max_examples=40, deadline=None)
+@given(stable_sizes=st.lists(st.integers(1, 64).map(lambda x: x * 16),
+                             min_size=1, max_size=8),
+       transient_a=st.lists(st.integers(1, 32).map(lambda x: x * 8),
+                            min_size=0, max_size=8),
+       transient_b=st.lists(st.integers(1, 32).map(lambda x: x * 8),
+                            min_size=0, max_size=8),
+       seed=st.integers(0, 1000))
+def test_stable_addresses_invariant_to_transient_interleaving(
+        stable_sizes, transient_a, transient_b, seed):
+    """Two replicas perform the SAME stable allocation sequence but
+    arbitrarily different transient allocations — stable buffers must land
+    at identical addresses (the paper's consistent-allocation property)."""
+    rng = np.random.Generator(np.random.Philox(seed))
+
+    def run(transients):
+        mem = DeviceMemory(1 << 20)
+        stable_addrs = []
+        t_queue = list(transients)
+        live_transients = []
+        for size in stable_sizes:
+            # random transient churn between stable allocations
+            while t_queue and rng.random() < 0.6:
+                b = mem.alloc(t_queue.pop(), stable=False)
+                live_transients.append(b.addr)
+            if live_transients and rng.random() < 0.5:
+                mem.free(live_transients.pop())
+            stable_addrs.append(mem.alloc(size, stable=True).addr)
+        return stable_addrs
+
+    a = run(transient_a)
+    b = run(transient_b)
+    assert a == b
+
+
+def test_regions_never_collide():
+    mem = DeviceMemory(1024)
+    s = mem.alloc(256, stable=True)
+    t = mem.alloc(256, stable=False)
+    assert t.addr + t.size <= s.addr
+    with pytest.raises(OutOfMemory):
+        mem.alloc(1024, stable=False)
+
+
+def test_lazy_free_content_cached():
+    mem = DeviceMemory(1024)
+    b = mem.alloc(64, stable=True)
+    mem.write(b.addr, np.arange(16, dtype=np.float32))
+    cs = b.checksum()
+    mem.free(b.addr, lazy=True)
+    found = mem.find_by_checksum(cs)
+    assert found is not None          # opportunistically cached (§5.2.1)
+
+
+def test_transient_reclaim():
+    mem = DeviceMemory(1024)
+    a = mem.alloc(512, stable=False)
+    mem.free(a.addr)
+    b = mem.alloc(1024 - 16, stable=False)   # fits again after reclaim
+    assert b.addr == 0

@@ -1,0 +1,74 @@
+"""Device proxy (§3, §4.2): handle virtualization, log & replay."""
+import numpy as np
+
+from repro.core.device_proxy import DeviceProxyClient, DeviceProxyServer
+
+
+def _session():
+    server = DeviceProxyServer(1 << 20)
+    client = DeviceProxyClient(server)
+    stream = client.call("create_stream")
+    event = client.call("create_event")
+    comm = client.call("create_communicator", 4, 0)
+    buf = client.call("malloc", 1024, True)
+    client.call("memcpy_h2d", buf, np.arange(256, dtype=np.float32))
+    return server, client, stream, event, comm, buf
+
+
+def test_virtual_handles_stable_across_restore():
+    server, client, stream, event, comm, buf = _session()
+    state = client.snapshot_device_state()
+    old_phys = dict(client.v2p)
+
+    fresh = DeviceProxyServer(1 << 20, device_id=1)
+    client.restore(fresh, state)
+
+    # virtual handles unchanged, physical handles remapped
+    assert set(client.v2p) == set(old_phys)
+    data = client.call("memcpy_d2h", buf)
+    np.testing.assert_array_equal(data, np.arange(256, dtype=np.float32))
+    # stateful objects were replayed on the fresh server
+    assert len(fresh.streams) == 1
+    assert len(fresh.communicators) == 1
+
+
+def test_stable_buffers_same_address_after_restore():
+    """The mmap SA_Int maps stable buffers at the same device address, so
+    host-held device pointers stay valid (§4.2)."""
+    server, client, *_, buf = _session()
+    addr_before = client.v2p[buf]
+    state = client.snapshot_device_state()
+    fresh = DeviceProxyServer(1 << 20)
+    client.restore(fresh, state)
+    assert client.v2p[buf] == addr_before
+
+
+def test_log_compaction_drops_freed_mallocs():
+    server = DeviceProxyServer(1 << 20)
+    client = DeviceProxyClient(server)
+    keep = client.call("malloc", 64, True)
+    drop = client.call("malloc", 64, False)
+    client.call("free", drop)
+    entries = client.compact_log()
+    mallocs = [e for e in entries if e.api == "malloc"]
+    assert len(mallocs) == 1 and mallocs[0].virtual_handle == keep
+
+
+def test_kernel_launch_executes_on_server_memory():
+    server = DeviceProxyServer(1 << 20)
+    client = DeviceProxyClient(server)
+    a = client.call("malloc", 64, False)
+    o = client.call("malloc", 64, False)
+    client.call("memcpy_h2d", a, np.full(16, 2.0, np.float32))
+    client.call("launch_kernel", lambda x: x * 3.0,
+                (client.v2p[a],), (client.v2p[o],))
+    np.testing.assert_allclose(client.call("memcpy_d2h", o), 6.0)
+    assert server.kernel_launches == 1
+
+
+def test_file_io_tracking():
+    client = DeviceProxyClient(DeviceProxyServer(1 << 10))
+    client.open_file("/tmp/x", "r")
+    client.open_file("/tmp/y", "w")
+    client.open_file("/tmp/z", "a+")
+    assert client.written_files == ["/tmp/y", "/tmp/z"]

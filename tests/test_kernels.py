@@ -1,0 +1,162 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.checksum.ops import _as_words, fingerprint
+from repro.kernels.checksum.ref import fingerprint_u32_ref
+from repro.kernels.ssd_scan.ops import ssd_chunked_pallas
+from repro.kernels.ssd_scan.ref import ssd_chunked_ref, ssd_sequential_ref
+from repro.kernels.swa_attention.ops import swa_attention
+from repro.kernels.swa_attention.ref import swa_attention_ref
+
+
+# ---------------------------------------------------------------- checksum
+@pytest.mark.parametrize("shape,dtype", [
+    ((1000,), jnp.float32), ((64, 128), jnp.bfloat16),
+    ((7, 11, 13), jnp.int32), ((100_000,), jnp.float32),
+    ((3, 5), jnp.float32), ((256, 128), jnp.uint8),
+])
+def test_fingerprint_matches_oracle(shape, dtype, rng_key):
+    if jnp.issubdtype(dtype, jnp.floating) or dtype == jnp.bfloat16:
+        x = jax.random.normal(rng_key, shape, jnp.float32).astype(dtype)
+    else:
+        x = jax.random.randint(rng_key, shape, 0, 100).astype(dtype)
+    got = fingerprint(x)
+    want = fingerprint_u32_ref(_as_words(x))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fingerprint_sensitivity(rng_key):
+    x = jax.random.normal(rng_key, (4096,), jnp.float32)
+    base = np.asarray(fingerprint(x))
+    for i in (0, 1000, 4095):
+        mod = x.at[i].add(1e-6)
+        assert not np.array_equal(np.asarray(fingerprint(mod)), base)
+    # permutation sensitivity (position-weighted)
+    assert not np.array_equal(np.asarray(fingerprint(x[::-1])), base)
+
+
+def test_fingerprint_equal_content_equal_digest(rng_key):
+    x = jax.random.normal(rng_key, (512, 128), jnp.float32)
+    assert np.array_equal(np.asarray(fingerprint(x)),
+                          np.asarray(fingerprint(jnp.array(x))))
+
+
+# ------------------------------------------------------------- attention
+@pytest.mark.parametrize("b,s,h,d,w", [
+    (2, 256, 4, 64, 0),       # full causal
+    (1, 384, 2, 128, 128),    # window == block
+    (2, 200, 3, 64, 96),      # ragged seq, odd window
+    (1, 512, 2, 64, 0),
+    (1, 128, 1, 32, 48),
+])
+def test_swa_attention_matches_oracle(b, s, h, d, w, rng_key):
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, d), jnp.float32)
+    out = swa_attention(q, k, v, window=w)
+
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+
+    ref = swa_attention_ref(to_bh(q), to_bh(k), to_bh(v), window=w)
+    ref = ref.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_swa_attention_bf16(rng_key):
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64), jnp.float32).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 256, 2, 64), jnp.float32).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 256, 2, 64), jnp.float32).astype(jnp.bfloat16)
+    out = swa_attention(q, k, v, window=64)
+    def to_bh(x): return x.transpose(0, 2, 1, 3).reshape(2, 256, 64)
+    ref = swa_attention_ref(to_bh(q.astype(jnp.float32)),
+                            to_bh(k.astype(jnp.float32)),
+                            to_bh(v.astype(jnp.float32)), window=64)
+    ref = ref.reshape(1, 2, 256, 64).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, dtype=np.float32),
+                               np.asarray(ref), rtol=2e-2, atol=2e-2)
+
+
+# ------------------------------------------------------------------- SSD
+@pytest.mark.parametrize("bs,l,h,p,n,chunk", [
+    (2, 128, 4, 32, 16, 32),
+    (1, 200, 2, 64, 32, 64),      # ragged length
+    (2, 96, 8, 16, 64, 32),
+    (1, 64, 1, 128, 128, 64),
+])
+def test_ssd_kernel_matches_oracles(bs, l, h, p, n, chunk, rng_key):
+    ks = jax.random.split(rng_key, 5)
+    x = jax.random.normal(ks[0], (bs, l, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bs, l, h)))
+    a = -jnp.exp(0.1 * jax.random.normal(ks[2], (h,)))
+    b = jax.random.normal(ks[3], (bs, l, n))
+    c = jax.random.normal(ks[4], (bs, l, n))
+    y1, s1 = ssd_chunked_pallas(x, dt, a, b, c, chunk)
+    y2, s2 = ssd_chunked_ref(x, dt, a, b, c, chunk)
+    y3, s3 = ssd_sequential_ref(x, dt, a, b, c)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y3),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s3),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_initial_state_continuation(rng_key):
+    """Chunked scan with carried state == one long scan (prefill/decode
+    continuity)."""
+    ks = jax.random.split(rng_key, 5)
+    bs, l, h, p, n = 1, 128, 2, 32, 16
+    x = jax.random.normal(ks[0], (bs, l, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bs, l, h)))
+    a = -jnp.exp(0.1 * jax.random.normal(ks[2], (h,)))
+    b = jax.random.normal(ks[3], (bs, l, n))
+    c = jax.random.normal(ks[4], (bs, l, n))
+    y_full, s_full = ssd_chunked_pallas(x, dt, a, b, c, 32)
+    half = l // 2
+    y1, s1 = ssd_chunked_pallas(x[:, :half], dt[:, :half], a,
+                                b[:, :half], c[:, :half], 32)
+    y2, s2 = ssd_chunked_pallas(x[:, half:], dt[:, half:], a,
+                                b[:, half:], c[:, half:], 32,
+                                initial_state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+# -------------------------------------------------------------- fused CE
+from repro.kernels.fused_ce.ops import fused_cross_entropy
+from repro.kernels.fused_ce.ref import cross_entropy_ref
+
+
+@pytest.mark.parametrize("t,d,v", [
+    (100, 64, 500), (256, 128, 1024), (130, 32, 777), (128, 64, 512),
+])
+def test_fused_ce_matches_oracle(t, d, v, rng_key):
+    ks = jax.random.split(rng_key, 3)
+    h = jax.random.normal(ks[0], (t, d), jnp.float32)
+    w = 0.05 * jax.random.normal(ks[1], (d, v), jnp.float32)
+    lab = jax.random.randint(ks[2], (t,), -1, v)   # includes ignored labels
+    l1, c1 = fused_cross_entropy(h, w, lab)
+    l2, c2 = cross_entropy_ref(h, w, lab)
+    assert float(c1) == float(c2)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_fused_ce_bf16_inputs(rng_key):
+    ks = jax.random.split(rng_key, 3)
+    h = jax.random.normal(ks[0], (128, 64), jnp.float32).astype(jnp.bfloat16)
+    w = (0.05 * jax.random.normal(ks[1], (64, 512))).astype(jnp.bfloat16)
+    lab = jax.random.randint(ks[2], (128,), 0, 512)
+    l1, c1 = fused_cross_entropy(h, w, lab)
+    l2, c2 = cross_entropy_ref(h.astype(jnp.float32),
+                               w.astype(jnp.float32), lab)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=2e-2)
