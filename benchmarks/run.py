@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
 - fig4_splicing    — N-way time-slicing overhead, squash on/off (Figure 4)
 - table5_migration — migration/resize latency breakdown (Table 5)
 - sched_sim        — fleet utilization + SLA vs static baseline (§1.1)
+- sched_scale      — simulator throughput on a 50k-job trace vs seed loop
 - kernels_bench    — Pallas kernel micro-benchmarks
 
     PYTHONPATH=src python -m benchmarks.run [--only NAME]
@@ -18,7 +19,7 @@ import sys
 import traceback
 
 MODULES = ["table3_overhead", "table4_checkpoint", "fig4_splicing",
-           "table5_migration", "sched_sim", "kernels_bench"]
+           "table5_migration", "sched_sim", "sched_scale", "kernels_bench"]
 
 
 def main() -> None:

@@ -3,7 +3,9 @@
 A 2-region / 4-cluster / 2048-GPU fleet under a mixed-tier workload.
 The elastic policy preempts, resizes and migrates (all work-conserving
 because of the mechanisms in core/) and drives utilization up while
-protecting premium-tier SLAs.
+protecting premium-tier SLAs — and it pays for every mechanism
+invocation: the cost model charges Table-5 downtime per preemption /
+migration / resize, reported per tier below.
 
     PYTHONPATH=src python examples/fleet_scheduling.py
 """
@@ -22,7 +24,9 @@ def main() -> None:
                                  SimConfig(horizon_seconds=36 * 3600))
             res = sim.run()
             print(f"  {policy.name:8s} {res.summary()}")
-            print(f"           idle={res.gpu_seconds_idle/3.6e6:.1f} kGPUh")
+            print(f"           idle={res.gpu_seconds_idle/3.6e6:.1f} kGPUh "
+                  f"dead={res.gpu_seconds_dead/3600:.1f} GPUh "
+                  f"(mechanism downtime, charged)")
         print()
 
 

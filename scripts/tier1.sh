@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 verification: install dev deps when the environment allows it
+# (hermetic containers fall back to tests/_hypothesis_fallback.py) and run
+# the full suite.
+#
+#   ./scripts/tier1.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! python -c "import hypothesis" >/dev/null 2>&1; then
+    pip install -r requirements-dev.txt >/dev/null 2>&1 \
+        || echo "note: pip install unavailable; using vendored hypothesis fallback"
+fi
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"

@@ -95,6 +95,34 @@ _COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
 _INSTR_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
 
 
+def _split_operands(s: str) -> List[str]:
+    """Split an operand list on top-level commas only: operand entries may
+    carry typed shapes with layouts (``f32[32,64]{1,0} %lhs``) whose braces
+    and brackets contain commas of their own.  The operand NAME is the last
+    whitespace-separated token of each entry."""
+    parts: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in s:
+        if ch in "{[(":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    names = []
+    for p in parts:
+        p = p.strip()
+        if p:
+            names.append(p.split()[-1].lstrip("%"))
+    return names
+
+
 def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
     comps: Dict[str, Computation] = {}
     entry: Optional[str] = None
@@ -137,8 +165,7 @@ def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
         oend = _match_paren(rest2, ostart)
         operand_str = rest2[ostart + 1:oend]
         attrs = rest2[oend + 1:]
-        operands = [o.strip().lstrip("%") for o in operand_str.split(",")
-                    if o.strip()]
+        operands = _split_operands(operand_str)
         instr = Instr(name, shape, op, operands, attrs)
         cur.instrs.append(instr)
         cur.defs[name] = shape

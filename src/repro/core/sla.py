@@ -35,29 +35,58 @@ TIERS = {
 
 
 class GpuFractionAccount:
-    """Tracks a job's delivered vs. demanded GPU time over wall intervals."""
+    """Tracks a job's delivered vs. demanded GPU time over wall intervals.
+
+    The account is on the scheduler's per-tick hot path (the policy consults
+    ``headroom`` for every guaranteed job at every tick), so queries must not
+    rescan history: contiguous equal-allocation records are coalesced,
+    delivered time is answered from a prefix sum in O(log n), and the
+    completed-window worst fraction is cached incrementally per window size.
+    """
 
     def __init__(self, tier: str, demand_gpus: int):
         self.tier = TIERS[tier]
         self.demand = demand_gpus
-        # (start, end, allocated_gpus); contiguous, append-only
+        # (start, end, allocated_gpus); contiguous, append-only, coalesced
         self.intervals: List[Tuple[float, float, int]] = []
+        self._starts: List[float] = []
+        # _cum[i] = delivered seconds in all intervals before interval i
+        self._cum: List[float] = []
+        # window size -> (worst over completed windows, next window start)
+        self._wcache: dict = {}
+
+    def _weight(self, g: int) -> float:
+        return min(g / self.demand, 1.0) if self.demand > 0 else 0.0
 
     def record(self, start: float, end: float, allocated: int) -> None:
         if end <= start:
             return
+        if self.intervals:
+            ls, le, lg = self.intervals[-1]
+            if lg == allocated and start <= le + 1e-9:
+                self.intervals[-1] = (ls, max(le, end), lg)
+                return
         self.intervals.append((start, end, allocated))
+        self._starts.append(start)
+        if len(self.intervals) == 1:
+            self._cum.append(0.0)
+        else:
+            ps, pe, pg = self.intervals[-2]
+            self._cum.append(self._cum[-1] + (pe - ps) * self._weight(pg))
 
     # progress rate while holding g of n demanded GPUs is g/n (work-
     # conserving elasticity; splicing overhead is handled separately)
+    def _delivered_before(self, t: float) -> float:
+        i = bisect.bisect_right(self._starts, t) - 1
+        if i < 0:
+            return 0.0
+        s, e, g = self.intervals[i]
+        return self._cum[i] + max(0.0, min(t, e) - s) * self._weight(g)
+
     def delivered_seconds(self, t0: float, t1: float) -> float:
-        tot = 0.0
-        for s, e, g in self.intervals:
-            lo, hi = max(s, t0), min(e, t1)
-            if hi > lo:
-                tot += (hi - lo) * min(g / self.demand, 1.0) \
-                    if self.demand else 0.0
-        return tot
+        if not self.intervals or t1 <= t0:
+            return 0.0
+        return max(0.0, self._delivered_before(t1) - self._delivered_before(t0))
 
     def fraction(self, t0: float, t1: float) -> float:
         if t1 <= t0:
@@ -65,12 +94,24 @@ class GpuFractionAccount:
         return self.delivered_seconds(t0, t1) / (t1 - t0)
 
     def worst_window_fraction(self, now: float, window: float = HOUR) -> float:
-        """Worst fraction over any completed window (hourly enforcement)."""
+        """Worst fraction over any completed window (hourly enforcement).
+
+        A window is only cached once it is fully behind the recorded
+        frontier — its fraction is then final (records are append-only in
+        time).  Windows past the frontier are evaluated fresh each call, so
+        a query issued before the interval was recorded never poisons the
+        cache.
+        """
         if not self.intervals:
             return 1.0
         start = self.intervals[0][0]
-        worst = 1.0
-        t = start
+        frontier = self.intervals[-1][1]
+        worst, t = self._wcache.get(window, (1.0, start))
+        while t + window <= min(now, frontier) + 1e-9:
+            worst = min(worst, self.fraction(t, t + window))
+            t += window
+        self._wcache[window] = (worst, t)
+        # completed windows beyond the recorded frontier: not final yet
         while t + window <= now + 1e-9:
             worst = min(worst, self.fraction(t, t + window))
             t += window

@@ -1,4 +1,5 @@
 from repro.scheduler.types import Cluster, Fleet, Job, Region  # noqa: F401
+from repro.scheduler.costs import CostModel, UniformCostModel  # noqa: F401
 from repro.scheduler.simulator import FleetSimulator, SimConfig  # noqa: F401
 from repro.scheduler.policy import ElasticPolicy, StaticGangPolicy  # noqa: F401
 from repro.scheduler.executor import FleetExecutor, ManagedJob  # noqa: F401

@@ -2,13 +2,21 @@
 
 Where ``simulator.py`` models jobs as progress rates, this executor runs a
 miniature fleet of actual ``ElasticRuntime`` training jobs (reduced
-configs) and applies the ``ElasticPolicy``'s decisions through the REAL
+configs) and applies the scheduling decisions through the REAL
 mechanisms: resize -> spliced-step swap; preempt -> in-graph barrier
 quiesce + content-deduped checkpoint; re-admit -> restore + resume.
 Figure 1's scopes as running code, on one host.
 
+The decisions come from the SAME ``ElasticPolicy.decide`` the simulator
+exercises — the executor adapts its slot capacity to a one-cluster
+``Fleet`` and mirrors each managed job as a scheduler ``Job`` (the
+workload-scope shadow: arrival order, SLA account, allocation state).
+One policy, two mechanism back-ends; simulated results and real-mechanism
+results can no longer drift apart.
+
 Capacity is counted in "device slots"; each job's logical world size stays
-constant while its physical allocation follows the policy.
+constant while its physical allocation follows the policy, rounded to the
+nearest world-size divisor (the splice constraint s = W/P).
 """
 from __future__ import annotations
 
@@ -20,7 +28,8 @@ from repro.configs.base import TrainConfig
 from repro.core.checkpoint import CheckpointStore
 from repro.core.elastic import ElasticRuntime
 from repro.core.migration import checkpoint_job
-from repro.core.sla import TIERS
+from repro.scheduler.policy import ElasticPolicy
+from repro.scheduler.types import Cluster, Fleet, Job, Region
 
 
 @dataclasses.dataclass
@@ -41,14 +50,31 @@ class ManagedJob:
         return self.world_size
 
 
+def _largest_divisor_leq(world: int, cap: int) -> int:
+    """Largest physical device count that divides ``world`` and is <= cap."""
+    give = min(world, cap)
+    while give > 0 and world % give != 0:
+        give -= 1
+    return give
+
+
 class FleetExecutor:
     """A single-host fleet of real elastic jobs under tiered scheduling."""
 
-    def __init__(self, total_slots: int, seed: int = 0):
+    def __init__(self, total_slots: int, seed: int = 0,
+                 policy: Optional[ElasticPolicy] = None,
+                 tick_seconds: float = 60.0):
         self.total_slots = total_slots
         self.jobs: Dict[str, ManagedJob] = {}
         self.store = CheckpointStore()
         self.log: List[Dict] = []
+        # the same policy object the simulator drives, over a 1-cluster fleet
+        self.policy = policy or ElasticPolicy()
+        self.fleet = Fleet([Region("local", [
+            Cluster("local", "local", total_slots)])])
+        self.tick_seconds = tick_seconds
+        self.clock = 0.0
+        self._shadows: Dict[str, Job] = {}    # workload-scope policy mirrors
 
     # ------------------------------------------------------------ admission
     def submit(self, job: ManagedJob, global_batch: int = 8,
@@ -61,22 +87,26 @@ class FleetExecutor:
         job._cfg, job._tcfg = cfg, tcfg
         job._gb, job._sl = global_batch, seq_len
         self.jobs[job.id] = job
+        # scheduler-facing mirror: demand = logical world, splice floor 1
+        self._shadows[job.id] = Job(
+            id=job.id, tier=job.tier, demand_gpus=job.world_size,
+            gpu_hours=job.total_steps * job.world_size / 3600.0,
+            arrival=self.clock, min_gpus=1)
 
     # ------------------------------------------------------------ policy
-    def _decide(self) -> Dict[str, int]:
-        """Tiered allocation over slot capacity (premium first, FIFO),
-        shrink-before-preempt via splice divisors."""
-        active = [j for j in self.jobs.values() if not j.done]
-        order = sorted(active,
-                       key=lambda j: -TIERS[j.tier].preempt_priority)
-        alloc: Dict[str, int] = {j.id: 0 for j in active}
+    def _decide_allocations(self) -> Dict[str, int]:
+        """Run the unified ``ElasticPolicy`` over the one-cluster fleet and
+        round each target to the splice constraint (divisor of world)."""
+        shadows = [self._shadows[jid] for jid, j in self.jobs.items()
+                   if not j.done]
+        decision = self.policy.decide(self.clock, shadows, self.fleet)
+        alloc: Dict[str, int] = {}
         free = self.total_slots
-        for j in order:
-            give = min(j.demand(), free)
-            # physical must divide world size: largest divisor <= give
-            while give > 0 and j.world_size % give != 0:
-                give -= 1
-            alloc[j.id] = give
+        for s in sorted(shadows, key=lambda s: -decision.alloc[s.id][0]):
+            target, _ = decision.alloc[s.id]
+            give = _largest_divisor_leq(self.jobs[s.id].world_size,
+                                        min(target, free))
+            alloc[s.id] = give
             free -= give
         return alloc
 
@@ -115,11 +145,21 @@ class FleetExecutor:
                         self.log.append({"event": "resize", "job": jid,
                                          "to": target})
             job.allocated = target
+            shadow = self._shadows[jid]
+            shadow.allocated = target
+            shadow.cluster = "local" if target > 0 else shadow.cluster
 
     # ------------------------------------------------------------ run
     def tick(self, steps: int = 1) -> None:
         """One scheduling round: decide, apply, advance running jobs."""
-        self._apply(self._decide())
+        self._apply(self._decide_allocations())
+        # the shadows' SLA accounts see the interval we are about to run
+        for jid, shadow in self._shadows.items():
+            if shadow.done_at is None:
+                shadow.account.record(self.clock,
+                                      self.clock + self.tick_seconds,
+                                      shadow.allocated)
+        self.clock += self.tick_seconds
         for job in self.jobs.values():
             if job.done or job.runtime is None or job.allocated == 0:
                 continue
@@ -129,6 +169,9 @@ class FleetExecutor:
                 job.done = True
                 job.allocated = 0
                 job.runtime = None
+                shadow = self._shadows[job.id]
+                shadow.done_at = self.clock
+                shadow.allocated = 0
                 self.log.append({"event": "done", "job": job.id,
                                  "steps": job.steps_done})
 

@@ -105,24 +105,47 @@ class ElasticPolicy:
                 alloc[j.id] = need
                 used += need
 
+        # 1b. shrink-before-queue: a guaranteed job whose full slice did not
+        #     fit but which is comfortably above its hourly guarantee can run
+        #     shrunk (>= min_gpus) this interval instead of queueing — the
+        #     paper's shrink-before-preempt, applied at admission time
+        for j in by_guarantee:
+            if alloc[j.id] > 0 or self._required(now, j) == 0:
+                continue
+            if j.account.headroom(now) <= 0.1:
+                continue        # guarantee at risk: all-or-nothing stands
+            give = min(j.demand_gpus, total - used)
+            if give >= j.min_gpus:
+                alloc[j.id] = give
+                used += give
+
         # 2. top up to full demand, same order (partial top-ups are fine —
-        #    the guarantee slice is already safe)
+        #    the guarantee slice is already safe); a job skipped by the
+        #    all-or-nothing pass must not be partially admitted here, and a
+        #    best-effort job is only admitted at or above its splice floor
         for j in by_guarantee:
             if alloc[j.id] == 0 and self._required(now, j) > 0:
                 continue        # not admitted this interval
             want = j.demand_gpus - alloc[j.id]
             give = min(want, total - used)
+            if alloc[j.id] == 0 and give < j.min_gpus:
+                continue        # below the ZeRO floor: keep it queued
             if give > 0:
                 alloc[j.id] += give
                 used += give
 
         # 3. opportunistic expansion of elastic jobs into spare capacity —
-        #    only when the fleet has real slack (avoid fragmenting under load)
+        #    only when the fleet has real slack (avoid fragmenting under
+        #    load), and only for jobs admitted this interval: handing spare
+        #    GPUs to a job the guarantee pass skipped would partially admit
+        #    it below its guarantee (or even below min_gpus)
         if total - used > 0.1 * total:
             for j in sorted(active,
                             key=lambda j: TIERS[j.tier].scaleup_priority):
                 if total - used <= 0:
                     break
+                if alloc[j.id] == 0:
+                    continue
                 extra = min(int(j.demand_gpus * (self.expand_factor - 1)),
                             total - used)
                 if extra > 0:
@@ -130,10 +153,13 @@ class ElasticPolicy:
                     used += extra
 
         # 4. enforce min_gpus (ZeRO partial-sharding floor): a job below its
-        #    floor is preempted instead (checkpointed, zero lost work)
+        #    floor is preempted instead (checkpointed, zero lost work).  Only
+        #    a job that was actually running is a preemption; zeroing a
+        #    queued job's tentative allocation is not an event.
         for j in sorted(active, key=_tier_key):
             if 0 < alloc[j.id] < j.min_gpus:
-                preempted.append(j.id)
+                if j.allocated > 0:
+                    preempted.append(j.id)
                 alloc[j.id] = 0
 
         # 5. placement: bin-pack descending into clusters; count migrations
@@ -176,6 +202,9 @@ class ElasticPolicy:
                     continue
             placements[j.id] = cid
             free[cid] -= g
-            if j.cluster is not None and j.cluster != cid:
-                migrations.append(j.id)      # transparent live migration
+            # transparent live migration — only a RUNNING job moving
+            # cluster; a restore onto a new cluster is a restore, matching
+            # the simulator's one-event classification
+            if j.allocated > 0 and j.cluster is not None and j.cluster != cid:
+                migrations.append(j.id)
         return placements, migrations

@@ -5,6 +5,7 @@ import dataclasses
 from typing import Dict, List, Optional
 
 from repro.core.sla import GpuFractionAccount, TIERS
+from repro.scheduler.costs import default_checkpoint_bytes
 
 
 @dataclasses.dataclass
@@ -61,6 +62,7 @@ class Job:
     arrival: float                # seconds
     min_gpus: int = 1
     splice_overhead: float = 0.03  # Fig-4 measured time-slicing overhead
+    checkpoint_bytes: int = 0     # deduped snapshot size (Table 4); 0 = estimate
 
     # runtime state
     allocated: int = 0
@@ -72,10 +74,18 @@ class Job:
     resizes: int = 0
     account: GpuFractionAccount = None
 
+    # cost accounting (set by the simulator's cost model)
+    downtime_until: float = 0.0   # no progress before this wall time
+    downtime_seconds: float = 0.0  # total dead time charged so far
+    restore_debt: float = 0.0     # preempt cost carried into the next restore
+    ever_ran: bool = False        # has a checkpoint to restore from
+
     def __post_init__(self):
         assert self.tier in TIERS
         if self.account is None:
             self.account = GpuFractionAccount(self.tier, self.demand_gpus)
+        if self.checkpoint_bytes <= 0:
+            self.checkpoint_bytes = default_checkpoint_bytes(self.demand_gpus)
 
     @property
     def ideal_seconds(self) -> float:
