@@ -1,91 +1,330 @@
-"""Simulator throughput at planet scale: vectorized vs seed event loop.
+"""Scheduler throughput at planet scale: vectorized policy + event loop.
 
-The refactored ``FleetSimulator`` advances progress with numpy over an
-arrival-sorted active window; the seed loop rescans every job (arrived or
-not, done or not) at every event with per-job Python SLA bookkeeping.
-This benchmark runs a dense 50k-job trace through both:
+The cost-aware ``ElasticPolicy`` runs its admission, expansion and
+placement passes as numpy lexsort/cumsum over job arrays; the simulator
+advances progress with numpy over an arrival-sorted active window.  This
+benchmark drives dense synthetic traces end to end and reports jobs/sec:
 
-- vectorized: the full trace, end to end (jobs/sec = jobs / wall).
-- legacy:     the same trace truncated to a short horizon (it would take
-              tens of minutes whole); its measured per-event cost is
-              extrapolated over its full event count (arrivals + ticks),
-              which UNDERSTATES the true cost — per-event work grows with
-              the live-job count later in the trace — so the reported
-              speedup is a floor.
+- ``vectorized``      — full trace, vectorized policy + vectorized loop.
+- ``scalar_policy``   — same trace, the pure-Python reference-oracle
+                        policy (full run; the gap versus vectorized
+                        grows with backlog depth).
+- ``seed_loop``       — the seed's O(jobs)-per-event simulator loop,
+                        truncated to a short horizon and extrapolated
+                        over the full event count (a floor: per-event
+                        cost grows with the live-job count).
 
-    PYTHONPATH=src python -m benchmarks.run --only sched_scale
+CLI (CI's bench-smoke job runs the 20k config; the 1M config is the
+planet-scale acceptance run):
+
+    PYTHONPATH=src python benchmarks/sched_scale.py \\
+        --jobs 20000 --check-equivalence --json BENCH_sched.json
+    PYTHONPATH=src python benchmarks/sched_scale.py \\
+        --jobs 1000000 --regions 8 --clusters-per-region 8
+
+``--check-equivalence`` re-runs the whole trace under the scalar
+reference policy and exits non-zero unless both the aggregates and the
+hash of the full decision sequence match the vectorized run exactly —
+the CI gate that keeps the numpy passes honest.
+
+Harness entry point (``python -m benchmarks.run --only sched_scale``)
+keeps the historical 50k rows.
 """
 from __future__ import annotations
 
+import argparse
+import hashlib
+import json
+import sys
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.scheduler.policy import ElasticPolicy
-from repro.scheduler.simulator import (FleetSimulator, SimConfig, make_fleet,
-                                       synth_workload)
+from repro.scheduler.simulator import (
+    FleetSimulator,
+    SimConfig,
+    make_fleet,
+    synth_workload,
+)
 
-N_JOBS = 50_000
 SEED = 5
-MEAN_INTERARRIVAL = 1.2        # dense arrivals: 50k jobs over ~16.7h
-WORK_SCALE = 0.018            # keeps the 65k-GPU fleet ~80% loaded (stable backlog)
-HORIZON = 24 * 3600.0
-LEGACY_HORIZON = 900.0         # seed loop gets a slice, then extrapolate
+BASE_INTERARRIVAL = 1.2  # 50k-job baseline on a 65,536-GPU fleet
+BASE_FLEET_GPUS = 4 * 4 * 4096
+WORK_SCALE = 0.018  # holds the fleet ~80% loaded (stable backlog)
+LEGACY_HORIZON = 900.0  # truncated slice for extrapolated baselines
 
 
-def _fleet():
-    return make_fleet(n_regions=4, clusters_per_region=4,
-                      gpus_per_cluster=4096)
+def _fleet(regions=4, clusters_per_region=4, gpus_per_cluster=4096):
+    return make_fleet(
+        n_regions=regions,
+        clusters_per_region=clusters_per_region,
+        gpus_per_cluster=gpus_per_cluster,
+    )
 
 
-def _trace():
-    return synth_workload(N_JOBS, _fleet().total(), seed=SEED,
-                          mean_interarrival=MEAN_INTERARRIVAL,
-                          work_scale=WORK_SCALE)
+def _interarrival(fleet_gpus: int) -> float:
+    # keep per-GPU arrival density at the 50k baseline so load stays at
+    # the same operating point whatever the trace/fleet size
+    return BASE_INTERARRIVAL * BASE_FLEET_GPUS / fleet_gpus
+
+
+def _trace(n_jobs: int, fleet_gpus: int):
+    return synth_workload(
+        n_jobs,
+        fleet_gpus,
+        seed=SEED,
+        mean_interarrival=_interarrival(fleet_gpus),
+        work_scale=WORK_SCALE,
+    )
+
+
+def _horizon(n_jobs: int, fleet_gpus: int) -> float:
+    span = n_jobs * _interarrival(fleet_gpus)
+    return max(24 * 3600.0, 1.25 * span + 12 * 3600.0)
+
+
+class _RecordingPolicy:
+    """Wraps a policy and folds every Decision into a running digest, so
+    the equivalence gate compares the full decision sequences — not just
+    end-of-run aggregates that could mask compensating divergences."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.name = inner.name
+        self._digest = hashlib.sha256()
+
+    def bind_costs(self, cost_model, interval_hint) -> None:
+        self.inner.bind_costs(cost_model, interval_hint)
+
+    def decide(self, now, jobs, fleet):
+        decision = self.inner.decide(now, jobs, fleet)
+        payload = repr(
+            (sorted(decision.alloc.items()), decision.preemptions, decision.migrations)
+        )
+        self._digest.update(payload.encode())
+        return decision
+
+    def digest(self) -> str:
+        return self._digest.hexdigest()
+
+
+def _result_signature(res) -> Dict:
+    return {
+        "utilization": res.utilization,
+        "completed": res.completed,
+        "preemptions": res.preemptions,
+        "migrations": res.migrations,
+        "migrations_cross_region": res.migrations_cross_region,
+        "resizes": res.resizes,
+        "restores": res.restores,
+        "gpu_seconds_dead": res.gpu_seconds_dead,
+        "queue_seconds": res.queue_seconds,
+    }
+
+
+def bench(
+    n_jobs: int,
+    regions: int,
+    clusters_per_region: int,
+    gpus_per_cluster: int,
+    check_equivalence: bool,
+    json_path: Optional[str],
+) -> Dict:
+    fleet = _fleet(regions, clusters_per_region, gpus_per_cluster)
+    horizon = _horizon(n_jobs, fleet.total())
+    policy = ElasticPolicy()
+    if check_equivalence:
+        policy = _RecordingPolicy(policy)
+    sim = FleetSimulator(
+        fleet,
+        _trace(n_jobs, fleet.total()),
+        policy,
+        SimConfig(horizon_seconds=horizon),
+    )
+    t0 = time.perf_counter()
+    res = sim.run()
+    wall = time.perf_counter() - t0
+    out = {
+        "jobs": n_jobs,
+        "fleet_gpus": fleet.total(),
+        "wall_seconds": wall,
+        "jobs_per_sec": n_jobs / wall,
+        "events": sim.events_processed,
+        "equivalence": "skipped",
+        **_result_signature(res),
+    }
+    msg = (
+        f"vectorized: {n_jobs} jobs in {wall:.1f}s "
+        f"({out['jobs_per_sec']:.0f} jobs/sec), "
+        f"util={res.utilization:.3f} done={res.completed} "
+        f"dead={res.gpu_seconds_dead / 3600:.0f} gpu-h "
+        f"migr={res.migrations} ({res.migrations_cross_region} cross)"
+    )
+    print(msg)
+
+    if check_equivalence:
+        fleet2 = _fleet(regions, clusters_per_region, gpus_per_cluster)
+        ref_policy = _RecordingPolicy(ElasticPolicy(vectorized=False))
+        ref = FleetSimulator(
+            fleet2,
+            _trace(n_jobs, fleet2.total()),
+            ref_policy,
+            SimConfig(horizon_seconds=horizon),
+        )
+        ref_res = ref.run()
+        a, b = _result_signature(res), _result_signature(ref_res)
+        out["decision_digest"] = policy.digest()
+        if a != b or policy.digest() != ref_policy.digest():
+            out["equivalence"] = "FAILED"
+            err = (
+                "EQUIVALENCE FAILURE: vectorized vs scalar policy "
+                "diverged on the same trace:\n"
+                f"  vec: digest={policy.digest()} {a}\n"
+                f"  ref: digest={ref_policy.digest()} {b}"
+            )
+            print(err, file=sys.stderr)
+        else:
+            out["equivalence"] = "ok"
+            msg = (
+                f"equivalence: scalar reference matches decision-for-"
+                f"decision ({res.preemptions} preempts, {res.migrations} "
+                f"migrations, {res.resizes} resizes)"
+            )
+            print(msg)
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path}")
+    return out
 
 
 def run() -> List[Dict]:
+    """Benchmark-harness entry: 50k rows incl. extrapolated baselines."""
+    n_jobs = 50_000
     rows = []
+    fleet = _fleet()
+    horizon = _horizon(n_jobs, fleet.total())
 
-    # -- vectorized loop, full trace --------------------------------------
-    sim = FleetSimulator(_fleet(), _trace(), ElasticPolicy(),
-                         SimConfig(horizon_seconds=HORIZON))
+    # -- vectorized policy + loop, full trace -----------------------------
+    sim = FleetSimulator(
+        fleet,
+        _trace(n_jobs, fleet.total()),
+        ElasticPolicy(),
+        SimConfig(horizon_seconds=horizon),
+    )
     t0 = time.perf_counter()
     res = sim.run()
     vec_wall = time.perf_counter() - t0
-    vec_jobs_per_sec = N_JOBS / vec_wall
-    rows.append({
-        "name": "sched_scale/vectorized_50k",
-        "us_per_call": vec_wall * 1e6,
-        "derived": (f"jobs_per_sec={vec_jobs_per_sec:.0f};"
-                    f"events={sim.events_processed};"
-                    f"done={res.completed}/{res.total_jobs};"
-                    f"util={res.utilization:.3f}"),
-    })
+    derived = (
+        f"jobs_per_sec={n_jobs / vec_wall:.0f};"
+        f"events={sim.events_processed};"
+        f"done={res.completed}/{res.total_jobs};"
+        f"util={res.utilization:.3f}"
+    )
+    rows.append(
+        {
+            "name": "sched_scale/vectorized_50k",
+            "us_per_call": vec_wall * 1e6,
+            "derived": derived,
+        }
+    )
+
+    # -- scalar reference policy, full trace (fast enough to measure) ----
+    fleet_s = _fleet()
+    scalar = FleetSimulator(
+        fleet_s,
+        _trace(n_jobs, fleet_s.total()),
+        ElasticPolicy(vectorized=False),
+        SimConfig(horizon_seconds=horizon),
+    )
+    t0 = time.perf_counter()
+    scalar.run()
+    scalar_wall = time.perf_counter() - t0
+    derived = (
+        f"jobs_per_sec={n_jobs / scalar_wall:.0f};"
+        f"events={scalar.events_processed};"
+        f"speedup_vectorized={scalar_wall / vec_wall:.2f}x"
+    )
+    rows.append(
+        {
+            "name": "sched_scale/scalar_policy_50k",
+            "us_per_call": scalar_wall * 1e6,
+            "derived": derived,
+        }
+    )
 
     # -- seed event loop, truncated + extrapolated ------------------------
-    legacy = FleetSimulator(_fleet(), _trace(), ElasticPolicy(),
-                            SimConfig(horizon_seconds=LEGACY_HORIZON,
-                                      vectorized=False))
+    fleet_i = _fleet()
+    legacy = FleetSimulator(
+        fleet_i,
+        _trace(n_jobs, fleet_i.total()),
+        ElasticPolicy(vectorized=False),
+        SimConfig(horizon_seconds=LEGACY_HORIZON, vectorized=False),
+    )
     t0 = time.perf_counter()
     legacy.run()
-    leg_wall = time.perf_counter() - t0
-    # full legacy event count: one event per arrival + one per tick
-    leg_total_events = N_JOBS + int(HORIZON / legacy.cfg.tick_seconds)
-    leg_full_wall = leg_wall / max(legacy.events_processed, 1) \
-        * leg_total_events
-    leg_jobs_per_sec = N_JOBS / leg_full_wall
-    speedup = leg_full_wall / vec_wall
-    rows.append({
-        "name": "sched_scale/seed_loop_50k_extrapolated",
-        "us_per_call": leg_full_wall * 1e6,
-        "derived": (f"jobs_per_sec={leg_jobs_per_sec:.1f};"
-                    f"measured_events={legacy.events_processed};"
-                    f"measured_wall_s={leg_wall:.1f};"
-                    f"speedup_vectorized={speedup:.0f}x"),
-    })
+    wall = time.perf_counter() - t0
+    # full event count: one per arrival + one per tick; per-event cost
+    # grows with live-job count later in the trace, so this UNDERSTATES
+    # the true cost and the reported speedup is a floor
+    total_events = n_jobs + int(horizon / legacy.cfg.tick_seconds)
+    full_wall = wall / max(legacy.events_processed, 1) * total_events
+    derived = (
+        f"jobs_per_sec={n_jobs / full_wall:.1f};"
+        f"measured_events={legacy.events_processed};"
+        f"measured_wall_s={wall:.1f};"
+        f"speedup_vectorized={full_wall / vec_wall:.0f}x"
+    )
+    rows.append(
+        {
+            "name": "sched_scale/seed_loop_50k_extrapolated",
+            "us_per_call": full_wall * 1e6,
+            "derived": derived,
+        }
+    )
     return rows
 
 
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--jobs", type=int, default=50_000)
+    parser.add_argument("--regions", type=int, default=4)
+    parser.add_argument("--clusters-per-region", type=int, default=4)
+    parser.add_argument("--gpus-per-cluster", type=int, default=4096)
+    parser.add_argument(
+        "--json",
+        type=str,
+        default=None,
+        help="write benchmark metrics to this JSON file",
+    )
+    parser.add_argument(
+        "--check-equivalence",
+        action="store_true",
+        help="re-run under the scalar reference policy and fail unless "
+        "results match exactly",
+    )
+    parser.add_argument(
+        "--harness",
+        action="store_true",
+        help="print the benchmark-harness CSV rows instead",
+    )
+    args = parser.parse_args(argv)
+    if args.harness:
+        for row in run():
+            quoted = '"' + row["derived"] + '"'
+            print(f"{row['name']},{row['us_per_call']:.1f},{quoted}")
+        return 0
+    out = bench(
+        args.jobs,
+        args.regions,
+        args.clusters_per_region,
+        args.gpus_per_cluster,
+        args.check_equivalence,
+        args.json,
+    )
+    return 1 if out["equivalence"] == "FAILED" else 0
+
+
 if __name__ == "__main__":
-    for row in run():
-        print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"")
+    sys.exit(main())

@@ -4,12 +4,32 @@
 # the full suite.
 #
 #   ./scripts/tier1.sh [extra pytest args...]
+#
+# Environment:
+#   PYTHON=...        interpreter to use (default: python, else python3)
+#   TIER1_OFFLINE=1   never touch pip — rely on the vendored hypothesis
+#                     fallback (CI sets this so a flaky index can't fail
+#                     or, worse, silently alter the run)
+#
+# Exit-code audit: `exec` replaces this shell with pytest, so pytest's
+# exit code IS the script's exit code — no `$?` plumbing to get wrong.
+# The only command allowed to fail is the best-effort pip install, which
+# is explicitly `|| echo`-guarded; everything else aborts via `set -e`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-if ! python -c "import hypothesis" >/dev/null 2>&1; then
-    pip install -r requirements-dev.txt >/dev/null 2>&1 \
+if [[ -z "${PYTHON:-}" ]]; then
+    PYTHON=python
+    command -v python >/dev/null 2>&1 || PYTHON=python3
+fi
+
+if [[ "${TIER1_OFFLINE:-0}" != "1" ]] \
+        && ! "$PYTHON" -c "import hypothesis" >/dev/null 2>&1; then
+    "$PYTHON" -m pip install -r requirements-dev.txt >/dev/null 2>&1 \
         || echo "note: pip install unavailable; using vendored hypothesis fallback"
 fi
 
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"
+# Prepend the repo's src/ as an ABSOLUTE path (a relative entry breaks if
+# a test chdirs) while preserving any PYTHONPATH the caller already set.
+PYTHONPATH="$PWD/src${PYTHONPATH:+:$PYTHONPATH}" \
+    exec "$PYTHON" -m pytest -x -q "$@"

@@ -48,8 +48,6 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
         if not m:
             continue
         shape_str, opname = m.group(1), m.group(2)
-        base = opname.rstrip("-start").rstrip("-done") if opname.endswith(
-            ("-start", "-done")) else opname
         for c in COLLECTIVES:
             # count only the -start (or plain) form to avoid double counting
             if opname == c or opname == f"{c}-start":

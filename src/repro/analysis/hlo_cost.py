@@ -22,7 +22,6 @@ is a rarely-used conservative fallback).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List, Optional, Tuple
 

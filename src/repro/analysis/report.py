@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 from repro.configs import ASSIGNED_ARCHS
 from repro.configs.base import INPUT_SHAPES

@@ -63,7 +63,6 @@ class RooflineReport:
 
 def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
     """Analytic useful FLOPs per step for the whole job."""
-    n = cfg.param_count()
     n_active = cfg.active_param_count()
     if shape.kind == "train":
         tokens = shape.seq_len * shape.global_batch

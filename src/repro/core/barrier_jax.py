@@ -8,12 +8,11 @@ is two integers per step (benchmarked in Table-3 reproduction).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 

@@ -28,7 +28,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.utils.hashing import buffer_checksum, chunk_checksums
+from repro.utils.hashing import chunk_checksums
 
 CHUNK = 1 << 20     # 1 MiB content chunks (page-dedup granularity)
 

@@ -29,7 +29,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.buffers import Buffer, DeviceMemory
+from repro.core.buffers import DeviceMemory
 
 STATE_CHANGING = {"create_stream", "create_event", "create_communicator",
                   "malloc"}
@@ -174,7 +174,6 @@ class DeviceProxyClient:
         then copy tensors back.  Virtual handles keep their values; the
         physical handles change underneath (§4.2.1)."""
         self.server = new_server
-        old_v2p = dict(self.v2p)
         self.v2p = {}
         for entry in self.compact_log():
             phys = new_server.execute(entry.api, *entry.args, **entry.kwargs)
@@ -184,4 +183,3 @@ class DeviceProxyClient:
             if vh not in self.v2p:
                 continue
             new_server.execute("memcpy_h2d", self.v2p[vh], st["data"])
-        del old_v2p

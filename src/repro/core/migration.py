@@ -11,9 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional
-
-import numpy as np
+from typing import Optional
 
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.core.barrier import run_barrier_simulation
@@ -37,6 +35,8 @@ class MigrationReport:
     device_stored_bytes: int
     host_stored_bytes: int
     work_conserving: bool       # resumed at exactly the preempted step
+    src_region: Optional[str] = None    # region pair the transfer crossed
+    dst_region: Optional[str] = None
 
     def transfer_seconds(self) -> float:
         return self.upload_seconds + self.download_seconds
@@ -65,12 +65,24 @@ def migrate(runtime: ElasticRuntime, store: CheckpointStore, job_id: str,
             global_batch: int, seq_len: int,
             per_step_seconds: float = 0.5,
             blob_bandwidth: float = constants.BLOB_STORE_BANDWIDTH,
-            barrier_seed: int = 0) -> tuple:
+            barrier_seed: int = 0,
+            topology=None, src_region: str = None,
+            dst_region: str = None) -> tuple:
     """Preempt ``runtime`` and resume it on ``to_physical`` devices.
+
+    When a ``RegionTopology`` and a (source, destination) region pair are
+    given, the modelled blob transfer runs at that pair's link bandwidth
+    plus its first-byte latency — the same tiers the scheduler's
+    ``CostModel`` charges, so measured reports and fleet-wide pricing
+    stay calibrated against each other (``CostModel.from_reports``).
 
     Returns (new_runtime, MigrationReport).
     """
     step_before = int(runtime.state["step"])
+    transfer_latency = 0.0
+    if topology is not None:
+        blob_bandwidth = topology.bandwidth(src_region, dst_region)
+        transfer_latency = topology.latency_seconds(src_region, dst_region)
 
     # 1. barrier: the distributed-protocol cost in mini-batches (from the
     #    faithful protocol engine), converted to wall time
@@ -85,10 +97,11 @@ def migrate(runtime: ElasticRuntime, store: CheckpointStore, job_id: str,
     stats = checkpoint_job(runtime, store, job_id)
     dump_s = time.time() - t0
 
-    # 3. transfer (modelled: the paper uploads to/downloads from blob store)
+    # 3. transfer (modelled: the paper uploads to/downloads from blob
+    #    store; a cross-region pair pays its slower link + first byte)
     total_bytes = stats.device_stored_bytes + stats.host_stored_bytes
     upload_s = total_bytes / blob_bandwidth
-    download_s = total_bytes / blob_bandwidth
+    download_s = total_bytes / blob_bandwidth + transfer_latency
 
     # 4. restore on the destination (fresh device proxies + replay; here:
     #    fresh runtime + state load + step compile = the rendezvous)
@@ -112,5 +125,6 @@ def migrate(runtime: ElasticRuntime, store: CheckpointStore, job_id: str,
         total_seconds=barrier_s + dump_s + upload_s + download_s + restore_s,
         device_stored_bytes=stats.device_stored_bytes,
         host_stored_bytes=stats.host_stored_bytes,
-        work_conserving=work_conserving)
+        work_conserving=work_conserving,
+        src_region=src_region, dst_region=dst_region)
     return new_runtime, report

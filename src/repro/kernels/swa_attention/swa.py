@@ -16,7 +16,6 @@ off-diagonal blocks are skipped via ``pl.when``.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -14,13 +14,11 @@ module, so they see the 1 real CPU device.
 """
 
 import argparse
-import dataclasses
 import json
 import time
 from typing import Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.analysis.hlo import op_histogram
 from repro.analysis.hlo_cost import analyze_hlo
@@ -118,7 +116,8 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
             d_sh = to_shardings(
                 decode_state_specs(dstate, mesh, shape.global_batch,
                                    shard_profile), mesh)
-            fn = lambda p, b: prefill_fn(p, b, cfg, remat=remat)
+            def fn(p, b):
+                return prefill_fn(p, b, cfg, remat=remat)
             lowered = jax.jit(
                 fn, in_shardings=(p_sh, b_sh),
                 out_shardings=(None, d_sh)).lower(params, batch)
@@ -132,7 +131,8 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
                                    shard_profile), mesh)
             tok = input_specs(cfg, shape)["token"]
             t_sh = to_shardings(batch_specs({"t": tok}, mesh), mesh)["t"]
-            fn = lambda p, s, t: decode_step_fn(p, s, t, cfg)
+            def fn(p, s, t):
+                return decode_step_fn(p, s, t, cfg)
             kw = {"donate_argnums": (1,)} if donate else {}
             lowered = jax.jit(
                 fn, in_shardings=(p_sh, d_sh, t_sh),

@@ -16,8 +16,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke_config
-from repro.models import (decode_step_fn, init_params, prefill_fn)
-from repro.models.frontend import synth_extra_inputs
 from repro.serving.engine import ServingEngine
 
 

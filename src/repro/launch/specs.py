@@ -8,7 +8,7 @@ train/serve state trees via ``jax.eval_shape``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import MoEConfig
 from repro.models.common import dense_init
 from repro.models.mlp import init_mlp, mlp_forward
-from repro.parallel.constraints import BATCH, MODEL, constrain, current_mesh
+from repro.parallel.constraints import BATCH, constrain, current_mesh
 
 EXPERT_PAD = 16   # pad expert count to a multiple of the model-axis size so
                   # expert weights shard expert-parallel (granite: 40->48)

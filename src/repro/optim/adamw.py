@@ -10,7 +10,8 @@ from repro.configs.base import TrainConfig
 
 
 def adamw_init(params: Any) -> Dict:
-    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    def zeros(p):
+        return jnp.zeros_like(p, dtype=jnp.float32)
     return {
         "m": jax.tree_util.tree_map(zeros, params),
         "v": jax.tree_util.tree_map(zeros, params),

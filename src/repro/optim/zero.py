@@ -13,7 +13,7 @@ partition-spec builder used by the launcher.
 """
 from __future__ import annotations
 
-from typing import Any, List, Tuple
+from typing import Any, List
 
 import jax
 import numpy as np

@@ -12,7 +12,7 @@ state intent unconditionally.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple, Union
+from typing import Tuple, Union
 
 import jax
 import numpy as np

@@ -1,5 +1,27 @@
-from repro.scheduler.types import Cluster, Fleet, Job, Region  # noqa: F401
-from repro.scheduler.costs import CostModel, UniformCostModel  # noqa: F401
-from repro.scheduler.simulator import FleetSimulator, SimConfig  # noqa: F401
-from repro.scheduler.policy import ElasticPolicy, StaticGangPolicy  # noqa: F401
-from repro.scheduler.executor import FleetExecutor, ManagedJob  # noqa: F401
+from repro.scheduler.costs import (
+    CostModel,
+    RegionLink,
+    RegionTopology,
+    UniformCostModel,
+)
+from repro.scheduler.executor import FleetExecutor, ManagedJob
+from repro.scheduler.policy import ElasticPolicy, StaticGangPolicy
+from repro.scheduler.simulator import FleetSimulator, SimConfig
+from repro.scheduler.types import Cluster, Fleet, Job, Region
+
+__all__ = [
+    "CostModel",
+    "RegionLink",
+    "RegionTopology",
+    "UniformCostModel",
+    "FleetExecutor",
+    "ManagedJob",
+    "ElasticPolicy",
+    "StaticGangPolicy",
+    "FleetSimulator",
+    "SimConfig",
+    "Cluster",
+    "Fleet",
+    "Job",
+    "Region",
+]

@@ -28,6 +28,7 @@ from repro.configs.base import TrainConfig
 from repro.core.checkpoint import CheckpointStore
 from repro.core.elastic import ElasticRuntime
 from repro.core.migration import checkpoint_job
+from repro.scheduler.costs import CostModel
 from repro.scheduler.policy import ElasticPolicy
 from repro.scheduler.types import Cluster, Fleet, Job, Region
 
@@ -63,13 +64,19 @@ class FleetExecutor:
 
     def __init__(self, total_slots: int, seed: int = 0,
                  policy: Optional[ElasticPolicy] = None,
-                 tick_seconds: float = 60.0):
+                 tick_seconds: float = 60.0,
+                 cost_model: Optional[CostModel] = None):
         self.total_slots = total_slots
         self.jobs: Dict[str, ManagedJob] = {}
         self.store = CheckpointStore()
         self.log: List[Dict] = []
         # the same policy object the simulator drives, over a 1-cluster fleet
         self.policy = policy or ElasticPolicy()
+        # thread the mechanism cost model into the policy so the executor's
+        # decisions price preempt/restore/resize exactly like the simulator
+        self.cost_model = cost_model or CostModel()
+        if hasattr(self.policy, "bind_costs"):
+            self.policy.bind_costs(self.cost_model, tick_seconds)
         self.fleet = Fleet([Region("local", [
             Cluster("local", "local", total_slots)])])
         self.tick_seconds = tick_seconds
@@ -125,9 +132,16 @@ class FleetExecutor:
                 checkpoint_job(job.runtime, self.store, jid)
                 job.runtime = None
                 job.preemptions += 1
+                # the shadow carries the preempt cost as restore debt, so
+                # the policy's restart gates price this job's re-admission
+                # exactly like the simulator would
+                shadow = self._shadows[jid]
+                shadow.restore_debt += self.cost_model.preempt_seconds(
+                    shadow.checkpoint_bytes)
                 self.log.append({"event": "preempt", "job": jid})
             elif target > 0 and job.allocated == 0 and job.runtime is None:
                 # REAL re-admission: restore from the deduped store
+                self._shadows[jid].restore_debt = 0.0
                 device, host, step = self.store.restore(jid)
                 job.runtime = ElasticRuntime.from_snapshot(
                     job._cfg, job._tcfg,
@@ -147,7 +161,9 @@ class FleetExecutor:
             job.allocated = target
             shadow = self._shadows[jid]
             shadow.allocated = target
-            shadow.cluster = "local" if target > 0 else shadow.cluster
+            if target > 0:
+                shadow.ever_ran = True
+                shadow.cluster = "local"
 
     # ------------------------------------------------------------ run
     def tick(self, steps: int = 1) -> None:

@@ -7,6 +7,37 @@ anywhere in the fleet), (b) shrinks before it preempts, preempts strictly
 by tier, (c) defragments by migrating small jobs to open contiguous
 capacity for large arrivals, all while respecting GPU-fraction SLAs.
 
+Two properties distinguish it from the seed policy:
+
+**Cost-aware.**  When a ``CostModel`` is attached (the simulator and the
+executor thread theirs in automatically), decisions weigh the mechanisms'
+real downtime instead of treating them as free:
+
+- *Victim ranking* — within a tier, running jobs are admitted ahead of
+  queued ones and ranked by the downtime a preemption+restore of them
+  would burn per GPU freed (``preempt_seconds + restore_seconds``); so
+  when capacity forces evictions, the victims are the jobs with small
+  ``checkpoint_bytes`` — the cheap ones to stop (Aryl's weighting).
+- *Shrink-before-queue gate* — comfort-shrinking a job into leftover
+  capacity is only worth a restore/resize whose downtime is shorter than
+  the scheduling interval; otherwise the mechanism would eat the whole
+  tick it was meant to exploit.
+- *Expansion gate* — opportunistic scale-up of an already-running job
+  triggers a splice resize; it only happens when the productive
+  GPU-seconds gained in one interval exceed the dead GPU-seconds the
+  resize charges.
+- *Region-aware placement* — a running job that must move is placed in
+  its current region when any same-region cluster fits, because the cost
+  model prices cross-region migrations at the slower inter-region blob
+  tier.
+
+**Vectorized.**  ``decide`` runs as numpy array passes — lexsort for the
+admission/expansion/placement orders, cumsum-based greedy capacity fits —
+so million-job traces clear in minutes (``benchmarks/sched_scale.py``).
+``ElasticPolicy(vectorized=False)`` keeps a pure-Python reference oracle
+with identical semantics; ``tests/test_policy_equivalence.py`` proves the
+two paths emit byte-identical decisions on random fleets.
+
 ``StaticGangPolicy`` is the status-quo baseline: jobs are gang-scheduled at
 full demand in FIFO order, never preempted, never resized — the comparison
 that motivates the paper (§1: utilization/idling).
@@ -16,19 +47,26 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.sla import TIERS
-from repro.scheduler.types import Cluster, Fleet, Job
+from repro.scheduler.costs import CostModel
+from repro.scheduler.types import Fleet, Job
 
+DEFAULT_INTERVAL_SECONDS = 300.0
 
-def _tier_key(j: Job) -> Tuple[int, float]:
-    # preemption order: basic first, then standard, then premium; later
-    # arrivals preempted before earlier ones
-    return (TIERS[j.tier].preempt_priority, -j.arrival)
+# tier attributes as numpy lookup tables: one dict hit per job instead of
+# three TIERS consultations on the decide hot path
+_TIER_CODE = {name: i for i, name in enumerate(TIERS)}
+_TIER_PRIO = np.array([TIERS[t].preempt_priority for t in TIERS], np.int64)
+_TIER_SUP = np.array([TIERS[t].scaleup_priority for t in TIERS], np.int64)
+_TIER_GFRAC = np.array([TIERS[t].gpu_fraction for t in TIERS], np.float64)
 
 
 @dataclasses.dataclass
 class Decision:
     """Target allocation for the next interval: job -> (gpus, cluster)."""
+
     alloc: Dict[str, Tuple[int, Optional[str]]]
     preemptions: List[str]
     migrations: List[str]
@@ -49,7 +87,7 @@ class StaticGangPolicy:
             if j.done_at is not None:
                 continue
             if j.allocated > 0:
-                alloc[j.id] = (j.allocated, j.cluster)   # never touched again
+                alloc[j.id] = (j.allocated, j.cluster)  # never touched again
                 continue
             # admit only if some cluster fits the FULL demand
             for cid, f in free.items():
@@ -62,149 +100,525 @@ class StaticGangPolicy:
         return Decision(alloc=alloc, preemptions=[], migrations=[])
 
 
+def _greedy_take(
+    wants: np.ndarray, floors: np.ndarray, cap: int, partial: bool
+) -> Tuple[np.ndarray, int]:
+    """Greedy capacity fit along an already-ordered candidate axis.
+
+    Each candidate takes its full ``want`` when that fits in the remaining
+    capacity; with ``partial=True`` a candidate whose full want no longer
+    fits may instead take everything left, provided that is still at or
+    above its ``floor``.  Equivalent to the per-job reference loop, but
+    runs as cumsum rounds: every round admits a whole prefix at once, so
+    the number of rounds is bounded by the number of skipped boundary
+    candidates, not by the job count.
+
+    Returns the granted array (aligned with ``wants``) and the capacity
+    left over.
+    """
+    gives = np.zeros(wants.size, dtype=np.int64)
+    remaining = int(cap)
+    # a candidate whose full want is below its own floor can never be
+    # granted anything (partial grants are capacity splits, not floor
+    # relaxations), matching the reference loop's give >= floor check
+    active = np.flatnonzero((wants > 0) & (wants >= floors))
+    while active.size and remaining > 0:
+        active = active[floors[active] <= remaining]
+        if not active.size:
+            break
+        prefix = np.cumsum(wants[active])
+        fit = prefix <= remaining
+        k = int(np.argmin(fit)) if not fit.all() else int(active.size)
+        if k > 0:
+            taken = active[:k]
+            gives[taken] = wants[taken]
+            remaining -= int(prefix[k - 1])
+        if k >= active.size:
+            break
+        boundary = active[k]
+        if partial and remaining >= floors[boundary]:
+            gives[boundary] = remaining  # full want no longer fits
+            remaining = 0
+        tail = k + 1
+        active = active[tail:]
+    return gives, remaining
+
+
 class ElasticPolicy:
     """Singularity's policy: SLA-tiered, shrink-before-preempt, elastic
-    expansion into spare capacity, migration-based defragmentation."""
+    expansion into spare capacity, migration-based defragmentation —
+    cost-aware and vectorized (see module docstring)."""
 
     name = "elastic"
 
-    def __init__(self, expand_factor: float = 2.0):
+    def __init__(
+        self,
+        expand_factor: float = 2.0,
+        cost_model: Optional[CostModel] = None,
+        interval_hint: Optional[float] = None,
+        vectorized: bool = True,
+    ):
         self.expand_factor = expand_factor
+        # threaded in by FleetSimulator/FleetExecutor when left unset, so
+        # the policy always prices decisions with the charged model
+        self.cost_model = cost_model
+        self.interval_hint = interval_hint
+        self.vectorized = vectorized
+        self._bound_cost = False
+        self._bound_interval = False
 
-    # -- helpers ---------------------------------------------------------
+    def bind_costs(self, cost_model: CostModel, interval_hint: float) -> None:
+        """Thread the driver's charged cost model and tick length into
+        this policy.  Values the caller configured explicitly are never
+        overwritten; values a previous bind installed are — so one policy
+        object can be reused across simulators/executors with different
+        cost configurations without silently pricing decisions with a
+        stale model."""
+        if self.cost_model is None or self._bound_cost:
+            self.cost_model = cost_model
+            self._bound_cost = True
+        if self.interval_hint is None or self._bound_interval:
+            self.interval_hint = interval_hint
+            self._bound_interval = True
+
+    # -- shared scalar helpers (both paths must agree bit-for-bit) --------
+    def _interval(self) -> float:
+        if self.interval_hint is not None:
+            return self.interval_hint
+        return DEFAULT_INTERVAL_SECONDS
+
     def _required(self, now: float, j: Job) -> int:
         """GPUs needed this interval to keep the job's hourly SLA safe."""
         tier = TIERS[j.tier]
         if tier.gpu_fraction <= 0:
-            return 0                       # basic: best effort
+            return 0  # basic: best effort
         # fraction delivered so far this window; demand enough to stay above
-        headroom = j.account.headroom(now)
-        if headroom > 0.1:
+        if j.account.headroom(now) > 0.1:
             # comfortably above guarantee -> can run shrunk this interval
             # (with a margin so the hourly window stays safe)
             frac = min(1.0, tier.gpu_fraction + 0.1)
             return max(j.min_gpus, int(j.demand_gpus * frac))
         return j.demand_gpus
 
+    def _victim_cost(self, j: Job) -> float:
+        """Downtime burned per GPU freed by preempting-then-restoring this
+        job (checkpoint-size-driven under the derived model); expensive
+        jobs are kept running, cheap ones are victimized.  Deliberately
+        NOT weighted by the job's size: per GPU freed the downtime is the
+        same, and preferring small victims only multiplies event count."""
+        if self.cost_model is None or j.allocated <= 0:
+            return 0.0
+        cb = j.checkpoint_bytes
+        return self.cost_model.preempt_seconds(cb) \
+            + self.cost_model.restore_seconds(cb)
+
+    def _restart_cost(self, j: Job) -> float:
+        """Downtime a restart/resize of this job would charge right now.
+
+        The restore term is the region-blind (intra) price — a lower
+        bound, since the destination cluster is only chosen later in
+        placement; the simulator charges the true pair-priced cost."""
+        if self.cost_model is None:
+            return 0.0
+        if j.allocated > 0:
+            return self.cost_model.resize_seconds(j.checkpoint_bytes)
+        if j.ever_ran:
+            return (
+                self.cost_model.restore_seconds(j.checkpoint_bytes)
+                + j.restore_debt
+            )
+        return 0.0
+
     def decide(self, now: float, jobs: List[Job], fleet: Fleet) -> Decision:
         active = [j for j in jobs if j.done_at is None and j.arrival <= now]
+        if not active:
+            return Decision(alloc={}, preemptions=[], migrations=[])
+        if self.vectorized:
+            return self._decide_vectorized(now, active, fleet)
+        return self._decide_reference(now, active, fleet)
+
+    # ================= vectorized path (the production path) =============
+    def _decide_vectorized(
+        self, now: float, active: List[Job], fleet: Fleet
+    ) -> Decision:
+        n = len(active)
+        interval = self._interval()
+        cm = self.cost_model
+        # one pass over the job objects: all numeric state in a single
+        # (n, 7) array (exact in float64 — GPU counts and byte sizes are
+        # far below 2**53), tier attributes via code lookup tables
+        base = np.array(
+            [
+                (
+                    j.demand_gpus,
+                    j.min_gpus,
+                    j.allocated,
+                    j.arrival,
+                    j.checkpoint_bytes,
+                    j.restore_debt,
+                    _TIER_CODE[j.tier],
+                )
+                for j in active
+            ],
+            dtype=np.float64,
+        ).reshape(n, 7)
+        demand = base[:, 0].astype(np.int64)
+        min_g = base[:, 1].astype(np.int64)
+        alloc0 = base[:, 2].astype(np.int64)
+        arrival = base[:, 3]
+        tcode = base[:, 6].astype(np.int64)
+        prio = _TIER_PRIO[tcode]
+        sup = _TIER_SUP[tcode]
+        gfrac = _TIER_GFRAC[tcode]
+        running = alloc0 > 0
+        guar = gfrac > 0.0
+
+        # SLA headroom: the one per-job Python consultation (the accounts
+        # are stateful O(log n) query objects); everything below is arrays
+        head = np.full(n, np.inf)
+        for i in np.flatnonzero(guar):
+            head[i] = active[i].account.headroom(now)
+        shrunk = np.maximum(
+            min_g, (demand * np.minimum(1.0, gfrac + 0.1)).astype(np.int64)
+        )
+        need = np.where(guar, np.where(head > 0.1, shrunk, demand), 0)
+
+        if cm is None:
+            vcost = np.zeros(n)
+            restart = np.zeros(n)
+            resize_s = np.zeros(n)
+        else:
+            cb = base[:, 4]
+            debt = base[:, 5]
+            pre_s = np.broadcast_to(
+                np.asarray(cm.preempt_seconds(cb), np.float64), (n,)
+            )
+            rest_s = np.broadcast_to(
+                np.asarray(cm.restore_seconds(cb), np.float64), (n,)
+            )
+            resize_s = np.broadcast_to(
+                np.asarray(cm.resize_seconds(cb), np.float64), (n,)
+            )
+            vcost = np.where(running, pre_s + rest_s, 0.0)
+            restart = np.where(
+                running, resize_s, np.where(
+                    np.fromiter((j.ever_ran for j in active), bool, n),
+                    rest_s + debt, 0.0,
+                )
+            )
+
+        idx = np.arange(n)
+        queued = (~running).astype(np.int64)
+        # admission order: tier first; within a tier keep running jobs
+        # ahead of queued ones ranked by how expensive they are to stop,
+        # then FIFO (lexsort: last key is primary)
+        order_a = np.lexsort((idx, arrival, -vcost, queued, -prio))
         total = fleet.total()
-        alloc: Dict[str, int] = {j.id: 0 for j in active}
-        preempted: List[str] = []
+        galloc = np.zeros(n, dtype=np.int64)
 
-        # 1. guaranteed tier demands, premium first, FIFO within tier.
-        #    All-or-nothing per job: under overload it is better to run
-        #    fewer jobs at guaranteed speed than all jobs too slow to meet
-        #    any SLA (jobs skipped here queue with zero lost work).
-        by_guarantee = sorted(
-            active, key=lambda j: (-TIERS[j.tier].preempt_priority, j.arrival))
+        # 1. guaranteed tier demands, all-or-nothing per job: under
+        #    overload it is better to run fewer jobs at guaranteed speed
+        #    than all jobs too slow to meet any SLA
+        w1 = need[order_a]
+        g1, rem = _greedy_take(w1, w1, total, partial=False)
+        galloc[order_a] = g1
+
+        # 1b. shrink-before-queue: a guaranteed job whose full slice did
+        #     not fit but which is comfortably above its hourly guarantee
+        #     runs shrunk (>= min_gpus) instead of queueing — if the
+        #     restart it takes costs less downtime than the interval buys
+        cand = (galloc == 0) & (need > 0) & (head > 0.1) & (restart < interval)
+        g1b, rem = _greedy_take(
+            np.where(cand, demand, 0)[order_a], min_g[order_a], rem, True
+        )
+        galloc[order_a] += g1b
+
+        # 2. top up to full demand, same order (the guarantee slice is
+        #    already safe); a job skipped by the all-or-nothing pass must
+        #    not be partially admitted here, and a best-effort job only
+        #    at or above its splice floor
+        skipped = (galloc == 0) & (need > 0)
+        want2 = np.where(skipped, 0, demand - galloc)
+        floor2 = np.where(galloc == 0, min_g, 1)
+        g2, rem = _greedy_take(want2[order_a], floor2[order_a], rem, True)
+        galloc[order_a] += g2
+
+        # 3. opportunistic expansion into spare capacity — only with real
+        #    fleet slack, only for jobs admitted this interval, and only
+        #    when the resize it would trigger costs less dead GPU time
+        #    than the extra capacity delivers in one interval
+        if rem > 0.1 * total:
+            extra = (demand * (self.expand_factor - 1.0)).astype(np.int64)
+            gain = extra.astype(np.float64) * interval
+            burn = resize_s * (galloc + extra).astype(np.float64)
+            free_event = ~running | (galloc != alloc0)
+            gate = (cm is None) | free_event | (burn < gain)
+            cand3 = (galloc > 0) & (extra > 0) & gate
+            order_s = np.lexsort((idx, sup))
+            g3, rem = _greedy_take(
+                np.where(cand3, extra, 0)[order_s],
+                np.ones(n, dtype=np.int64)[order_s], rem, True,
+            )
+            galloc[order_s] += g3
+
+        # 4. enforce min_gpus (ZeRO partial-sharding floor): below it the
+        #    job is preempted instead (checkpointed, zero lost work); only
+        #    a job that was actually running is a preemption event
+        below = (galloc > 0) & (galloc < min_g)
+        preempt = below & running
+        galloc[below] = 0
+
+        # 5. placement
+        galloc, placed, preempt, migrate = self._place_vectorized(
+            active, fleet, galloc, min_g, prio, running, preempt
+        )
+
+        clusters = fleet.clusters()
+        final: Dict[str, Tuple[int, Optional[str]]] = {}
+        for i, j in enumerate(active):
+            cid = clusters[placed[i]].id if placed[i] >= 0 else None
+            final[j.id] = (int(galloc[i]), cid)
+        return Decision(
+            alloc=final,
+            preemptions=sorted(active[i].id for i in np.flatnonzero(preempt)),
+            migrations=sorted(active[i].id for i in np.flatnonzero(migrate)),
+        )
+
+    def _place_vectorized(
+        self,
+        active: List[Job],
+        fleet: Fleet,
+        galloc: np.ndarray,
+        min_g: np.ndarray,
+        prio: np.ndarray,
+        running: np.ndarray,
+        preempt: np.ndarray,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Bin-pack allocations into clusters: keep placements that still
+        fit, then region-aware defragmentation for the rest.
+
+        The stay-put pass is a per-cluster cumsum greedy; the residual
+        loop only visits jobs that actually hold GPUs, so its trip count
+        is bounded by fleet capacity, not by queue depth.
+        """
+        n = len(active)
+        clusters = fleet.clusters()
+        cid_index = {c.id: k for k, c in enumerate(clusters)}
+        regions = {r.id: k for k, r in enumerate(fleet.regions)}
+        creg = np.fromiter(
+            (regions[fleet.region_of(c.id)] for c in clusters),
+            np.int64, len(clusters),
+        )
+        jcl = np.fromiter(
+            (cid_index.get(j.cluster, -1) for j in active), np.int64, n
+        )
+        has_cluster = np.fromiter(
+            (j.cluster is not None for j in active), bool, n
+        )
+        jreg = np.where(jcl >= 0, creg[np.maximum(jcl, 0)], -1)
+        free = np.fromiter(
+            (c.total_gpus for c in clusters), np.int64, len(clusters)
+        )
+        idx = np.arange(n)
+        # guaranteed tiers and large allocations place first so basic
+        # absorbs fragmentation
+        order_p = np.lexsort((idx, -galloc, -prio))
+        placed = np.full(n, -1, dtype=np.int64)
+
+        # keep existing placement when it still fits (no gratuitous moves)
+        stay = order_p[(galloc[order_p] > 0) & (jcl[order_p] >= 0)]
+        for k in range(len(clusters)):
+            sel = stay[jcl[stay] == k]
+            if sel.size:
+                g, left = _greedy_take(
+                    galloc[sel], galloc[sel], int(free[k]), partial=False
+                )
+                placed[sel[g > 0]] = k
+                free[k] = left
+
+        migrate = np.zeros(n, dtype=bool)
+        # only jobs that actually hold GPUs enter the Python loop: its
+        # trip count is bounded by fleet capacity, not queue depth
+        for i in order_p[galloc[order_p] > 0]:
+            g = int(galloc[i])
+            if g == 0 or placed[i] >= 0:
+                continue
+            fits = free >= g
+            if fits.any():
+                # defrag: most-free cluster, but a running job prefers to
+                # stay in-region (cross-region moves pay the slower blob
+                # tier in the cost model)
+                pool = fits
+                if running[i] and jreg[i] >= 0:
+                    same = fits & (creg == jreg[i])
+                    if same.any():
+                        pool = same
+                k = int(np.argmax(np.where(pool, free, -1)))
+                placed[i] = k
+                free[k] -= g
+            else:
+                # cannot fit contiguously anywhere -> shrink to the
+                # biggest hole, but never below the ZeRO splice floor
+                # (§5.4): below that the job is preempted
+                k = int(np.argmax(free))
+                hole = int(free[k])
+                if hole < min_g[i]:
+                    galloc[i] = 0
+                    if running[i]:
+                        preempt[i] = True
+                    continue
+                galloc[i] = hole
+                placed[i] = k
+                free[k] = 0
+            if running[i] and has_cluster[i] and placed[i] != jcl[i]:
+                migrate[i] = True
+        return galloc, placed, preempt, migrate
+
+    # ================= scalar reference oracle ===========================
+    def _decide_reference(
+        self, now: float, active: List[Job], fleet: Fleet
+    ) -> Decision:
+        """Pure-Python oracle with semantics identical to the vectorized
+        path (property-tested equivalence); kept for auditability and as
+        the ground truth the numpy passes are checked against."""
+        n = len(active)
+        interval = self._interval()
+        total = fleet.total()
+        need = [self._required(now, j) for j in active]
+        head = [
+            active[i].account.headroom(now)
+            if TIERS[active[i].tier].gpu_fraction > 0 else float("inf")
+            for i in range(n)
+        ]
+        vcost = [self._victim_cost(j) for j in active]
+        restart = [self._restart_cost(j) for j in active]
+        running = [j.allocated > 0 for j in active]
+
+        order_a = sorted(
+            range(n),
+            key=lambda i: (
+                -TIERS[active[i].tier].preempt_priority,
+                0 if running[i] else 1,
+                -vcost[i],
+                active[i].arrival,
+                i,
+            ),
+        )
+        galloc = [0] * n
         used = 0
-        for j in by_guarantee:
-            need = self._required(now, j)
-            if total - used >= need:
-                alloc[j.id] = need
-                used += need
 
-        # 1b. shrink-before-queue: a guaranteed job whose full slice did not
-        #     fit but which is comfortably above its hourly guarantee can run
-        #     shrunk (>= min_gpus) this interval instead of queueing — the
-        #     paper's shrink-before-preempt, applied at admission time
-        for j in by_guarantee:
-            if alloc[j.id] > 0 or self._required(now, j) == 0:
+        # 1. guaranteed demands, all-or-nothing
+        for i in order_a:
+            if need[i] > 0 and total - used >= need[i]:
+                galloc[i] = need[i]
+                used += need[i]
+
+        # 1b. shrink-before-queue (restart-cost gated)
+        for i in order_a:
+            if galloc[i] > 0 or need[i] == 0:
                 continue
-            if j.account.headroom(now) <= 0.1:
-                continue        # guarantee at risk: all-or-nothing stands
-            give = min(j.demand_gpus, total - used)
-            if give >= j.min_gpus:
-                alloc[j.id] = give
+            if head[i] <= 0.1 or restart[i] >= interval:
+                continue
+            give = min(active[i].demand_gpus, total - used)
+            if give >= active[i].min_gpus:
+                galloc[i] = give
                 used += give
 
-        # 2. top up to full demand, same order (partial top-ups are fine —
-        #    the guarantee slice is already safe); a job skipped by the
-        #    all-or-nothing pass must not be partially admitted here, and a
-        #    best-effort job is only admitted at or above its splice floor
-        for j in by_guarantee:
-            if alloc[j.id] == 0 and self._required(now, j) > 0:
-                continue        # not admitted this interval
-            want = j.demand_gpus - alloc[j.id]
-            give = min(want, total - used)
-            if alloc[j.id] == 0 and give < j.min_gpus:
-                continue        # below the ZeRO floor: keep it queued
+        # 2. top up to full demand
+        for i in order_a:
+            if galloc[i] == 0 and need[i] > 0:
+                continue  # not admitted this interval
+            give = min(active[i].demand_gpus - galloc[i], total - used)
+            if galloc[i] == 0 and give < active[i].min_gpus:
+                continue  # below the ZeRO floor: keep it queued
             if give > 0:
-                alloc[j.id] += give
+                galloc[i] += give
                 used += give
 
-        # 3. opportunistic expansion of elastic jobs into spare capacity —
-        #    only when the fleet has real slack (avoid fragmenting under
-        #    load), and only for jobs admitted this interval: handing spare
-        #    GPUs to a job the guarantee pass skipped would partially admit
-        #    it below its guarantee (or even below min_gpus)
+        # 3. gated opportunistic expansion
         if total - used > 0.1 * total:
-            for j in sorted(active,
-                            key=lambda j: TIERS[j.tier].scaleup_priority):
-                if total - used <= 0:
-                    break
-                if alloc[j.id] == 0:
+            cm = self.cost_model
+            order_s = sorted(
+                range(n),
+                key=lambda i: (TIERS[active[i].tier].scaleup_priority, i),
+            )
+            for i in order_s:
+                if galloc[i] == 0:
                     continue
-                extra = min(int(j.demand_gpus * (self.expand_factor - 1)),
-                            total - used)
-                if extra > 0:
-                    alloc[j.id] += extra
-                    used += extra
-
-        # 4. enforce min_gpus (ZeRO partial-sharding floor): a job below its
-        #    floor is preempted instead (checkpointed, zero lost work).  Only
-        #    a job that was actually running is a preemption; zeroing a
-        #    queued job's tentative allocation is not an event.
-        for j in sorted(active, key=_tier_key):
-            if 0 < alloc[j.id] < j.min_gpus:
-                if j.allocated > 0:
-                    preempted.append(j.id)
-                alloc[j.id] = 0
-
-        # 5. placement: bin-pack descending into clusters; count migrations
-        placements, migrations = self._place(active, alloc, fleet)
-        final = {jid: (alloc[jid], placements.get(jid)) for jid in alloc}
-        return Decision(alloc=final, preemptions=preempted,
-                        migrations=migrations)
-
-    def _place(self, jobs: List[Job], alloc: Dict[str, int], fleet: Fleet
-               ) -> Tuple[Dict[str, str], List[str]]:
-        free = {c.id: c.total_gpus for c in fleet.clusters()}
-        placements: Dict[str, str] = {}
-        migrations: List[str] = []
-        # guaranteed tiers place first so basic absorbs fragmentation
-        order = sorted(jobs, key=lambda j: (
-            -TIERS[j.tier].preempt_priority, -alloc[j.id]))
-        # keep existing placement when it still fits (avoid gratuitous moves)
-        for j in order:
-            g = alloc[j.id]
-            if g == 0:
-                continue
-            if j.cluster and free.get(j.cluster, 0) >= g:
-                placements[j.id] = j.cluster
-                free[j.cluster] -= g
-        for j in order:
-            g = alloc[j.id]
-            if g == 0 or j.id in placements:
-                continue
-            # defrag: pick the cluster with the most free capacity
-            cid = max(free, key=free.get)
-            if free[cid] < g:
-                # cannot fit contiguously anywhere -> shrink to the biggest
-                # hole, but never below the ZeRO splice floor (§5.4): below
-                # that the job is preempted (checkpointed, zero lost work)
-                g = free[cid]
-                if g < j.min_gpus:
-                    g = 0
-                alloc[j.id] = g
-                if g == 0:
+                extra = int(active[i].demand_gpus * (self.expand_factor - 1))
+                if extra <= 0:
                     continue
-            placements[j.id] = cid
+                if cm is not None and running[i] \
+                        and galloc[i] == active[i].allocated:
+                    burn = cm.resize_seconds(active[i].checkpoint_bytes) \
+                        * float(galloc[i] + extra)
+                    if not burn < float(extra) * interval:
+                        continue
+                give = min(extra, total - used)
+                if give > 0:
+                    galloc[i] += give
+                    used += give
+
+        # 4. splice floor -> preempt
+        preempted = set()
+        for i in range(n):
+            if 0 < galloc[i] < active[i].min_gpus:
+                if running[i]:
+                    preempted.add(i)
+                galloc[i] = 0
+
+        # 5. placement
+        clusters = fleet.clusters()
+        free = {c.id: c.total_gpus for c in clusters}
+        cluster_region = {c.id: fleet.region_of(c.id) for c in clusters}
+        order_ids = {c.id: k for k, c in enumerate(clusters)}
+        order_p = sorted(
+            range(n),
+            key=lambda i: (
+                -TIERS[active[i].tier].preempt_priority, -galloc[i], i,
+            ),
+        )
+        placements: Dict[int, str] = {}
+        for i in order_p:
+            j = active[i]
+            if galloc[i] > 0 and j.cluster in free \
+                    and free[j.cluster] >= galloc[i]:
+                placements[i] = j.cluster
+                free[j.cluster] -= galloc[i]
+        migrations = set()
+        for i in order_p:
+            j = active[i]
+            g = galloc[i]
+            if g == 0 or i in placements:
+                continue
+            fitting = [c for c in free if free[c] >= g]
+            if fitting:
+                region = cluster_region.get(j.cluster)
+                if running[i] and region is not None:
+                    same = [c for c in fitting if cluster_region[c] == region]
+                    if same:
+                        fitting = same
+                cid = min(fitting, key=lambda c: (-free[c], order_ids[c]))
+            else:
+                cid = min(free, key=lambda c: (-free[c], order_ids[c]))
+                hole = free[cid]
+                if hole < j.min_gpus:
+                    galloc[i] = 0
+                    if running[i]:
+                        preempted.add(i)
+                    continue
+                g = hole
+                galloc[i] = g
+            placements[i] = cid
             free[cid] -= g
-            # transparent live migration — only a RUNNING job moving
-            # cluster; a restore onto a new cluster is a restore, matching
-            # the simulator's one-event classification
-            if j.allocated > 0 and j.cluster is not None and j.cluster != cid:
-                migrations.append(j.id)
-        return placements, migrations
+            if running[i] and j.cluster is not None and cid != j.cluster:
+                migrations.add(i)
+
+        final = {
+            active[i].id: (galloc[i], placements.get(i)) for i in range(n)
+        }
+        return Decision(
+            alloc=final,
+            preemptions=sorted(active[i].id for i in preempted),
+            migrations=sorted(active[i].id for i in migrations),
+        )

@@ -32,8 +32,8 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.sla import TIERS
-from repro.scheduler.costs import CostModel
-from repro.scheduler.policy import Decision, ElasticPolicy
+from repro.scheduler.costs import CostModel, RegionTopology
+from repro.scheduler.policy import Decision
 from repro.scheduler.types import Cluster, Fleet, Job, Region
 
 
@@ -77,6 +77,8 @@ class SimResult:
     restores: int = 0
     gpu_seconds_dead: float = 0.0          # allocated but making no progress
     downtime_by_tier: Dict[str, float] = dataclasses.field(default_factory=dict)
+    migrations_cross_region: int = 0       # subset of migrations that moved region
+    restores_cross_region: int = 0         # subset of restores that moved region
 
     def summary(self) -> str:
         sla = ", ".join(f"{t}={v:.3f}" for t, v in self.sla_attainment.items())
@@ -85,18 +87,28 @@ class SimResult:
         return (f"util={self.utilization:.3f} sla[{sla}] "
                 f"done={self.completed}/{self.total_jobs} "
                 f"preempt={self.preemptions} migr={self.migrations} "
+                f"(cross={self.migrations_cross_region}) "
                 f"resize={self.resizes} restore={self.restores} "
                 f"downtime[{down}]")
 
 
 def make_fleet(n_regions: int = 2, clusters_per_region: int = 2,
-               gpus_per_cluster: int = 512) -> Fleet:
+               gpus_per_cluster: int = 512,
+               with_topology: bool = True) -> Fleet:
+    """Build a synthetic fleet; by default it carries a realistic tiered
+    ``RegionTopology`` (intra-region blob bandwidth, a fast tier between
+    ring-adjacent regions, a slow tier for far pairs) so migrations are
+    priced by region pair.  ``with_topology=False`` keeps the seed's
+    region-blind pricing for controlled experiments."""
     regions = []
     for r in range(n_regions):
         clusters = [Cluster(f"r{r}c{c}", f"r{r}", gpus_per_cluster)
                     for c in range(clusters_per_region)]
         regions.append(Region(f"r{r}", clusters))
-    return Fleet(regions)
+    topology = None
+    if with_topology:
+        topology = RegionTopology.tiered([r.id for r in regions])
+    return Fleet(regions, topology=topology)
 
 
 def synth_workload(n_jobs: int, fleet_gpus: int, seed: int = 0,
@@ -135,11 +147,23 @@ class FleetSimulator:
         self.policy = policy
         self.cfg = cfg or SimConfig()
         self.costs = self.cfg.costs()
+        # region-aware pricing: a fleet that declares a topology has its
+        # migrations charged by (source, destination) region pair
+        if fleet.topology is not None and self.costs.topology is None:
+            self.costs = dataclasses.replace(self.costs,
+                                             topology=fleet.topology)
+        # thread the charged cost model into the policy (unless the caller
+        # configured one explicitly): the scheduler should weigh the same
+        # downtime the simulator charges
+        if hasattr(policy, "bind_costs"):
+            policy.bind_costs(self.costs, self.cfg.tick_seconds)
         self.now = 0.0
         self.preemptions = 0
         self.migrations = 0
+        self.migrations_cross_region = 0
         self.resizes = 0
         self.restores = 0
+        self.restores_cross_region = 0
         self.busy_gpu_seconds = 0.0
         self.gpu_seconds_dead = 0.0
         self.queue_seconds = 0.0
@@ -172,19 +196,32 @@ class FleetSimulator:
                 # (re)start.  First admission is free; a restore pays
                 # download + rendezvous + the carried preempt debt.  A
                 # restore onto a different cluster is still one restore —
-                # the checkpoint travels through the blob store either way.
+                # but its download leg is priced by the (checkpoint
+                # region, destination region) pair, like a migration's.
                 if j.ever_ran:
                     self.restores += 1
+                    src = self.fleet.region_of(j.cluster)
+                    dst = self.fleet.region_of(cluster) \
+                        if cluster is not None else src
+                    if src is not None and dst is not None and src != dst:
+                        self.restores_cross_region += 1
                     self._charge(j, j.restore_debt +
-                                 self.costs.restore_seconds(j.checkpoint_bytes))
+                                 self.costs.restore_seconds(
+                                     j.checkpoint_bytes, src, dst))
                     j.restore_debt = 0.0
             elif gpus > 0 and cluster is not None and j.cluster is not None \
                     and cluster != j.cluster:
                 # live migration (possibly with a simultaneous resize —
-                # still one event, one Table-5 round trip)
+                # still one event, one Table-5 round trip); the transfer
+                # leg is priced by the (source, destination) region pair
                 j.migrations += 1
                 self.migrations += 1
-                self._charge(j, self.costs.migrate_seconds(j.checkpoint_bytes))
+                src = self.fleet.region_of(j.cluster)
+                dst = self.fleet.region_of(cluster)
+                if src is not None and dst is not None and src != dst:
+                    self.migrations_cross_region += 1
+                self._charge(j, self.costs.migrate_seconds(
+                    j.checkpoint_bytes, src, dst))
             elif gpus > 0 and gpus != prev_g:
                 # in-place transparent resize (splice swap)
                 j.resizes += 1
@@ -404,4 +441,6 @@ class FleetSimulator:
                               - self.gpu_seconds_dead),
             restores=self.restores,
             gpu_seconds_dead=self.gpu_seconds_dead,
-            downtime_by_tier={t: v for t, v in downtime.items() if v > 0})
+            downtime_by_tier={t: v for t, v in downtime.items() if v > 0},
+            migrations_cross_region=self.migrations_cross_region,
+            restores_cross_region=self.restores_cross_region)

@@ -2,10 +2,10 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 from repro.core.sla import GpuFractionAccount, TIERS
-from repro.scheduler.costs import default_checkpoint_bytes
+from repro.scheduler.costs import RegionTopology, default_checkpoint_bytes
 
 
 @dataclasses.dataclass
@@ -34,7 +34,12 @@ class Region:
 
 @dataclasses.dataclass
 class Fleet:
+    """The global scheduler's world model: regions of clusters plus the
+    inter-region transfer topology the cost model prices migrations
+    against (``None`` = region-blind, every pair at blob bandwidth)."""
+
     regions: List[Region]
+    topology: Optional[RegionTopology] = None
 
     def total(self) -> int:
         return sum(r.total() for r in self.regions)
@@ -44,6 +49,17 @@ class Fleet:
 
     def clusters(self) -> List[Cluster]:
         return [c for r in self.regions for c in r.clusters]
+
+    def region_of(self, cluster_id: Optional[str]) -> Optional[str]:
+        """Region id owning ``cluster_id`` (cached; clusters are static
+        for a fleet's lifetime)."""
+        if cluster_id is None:
+            return None
+        by_cluster = self.__dict__.get("_region_by_cluster")
+        if by_cluster is None:
+            by_cluster = {c.id: r.id for r in self.regions for c in r.clusters}
+            self.__dict__["_region_by_cluster"] = by_cluster
+        return by_cluster.get(cluster_id)
 
 
 @dataclasses.dataclass

@@ -1,6 +1,4 @@
 """Distributed-barrier protocol (§4.3.1): safety + liveness properties."""
-import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.barrier import CollectiveEngine, run_barrier_simulation
@@ -37,8 +35,6 @@ def test_meta_allreduce_payload_is_two_ints():
 
 def test_barrier_driver_in_graph():
     """Host driver over the in-graph psum: request -> ack -> acquire."""
-    import jax.numpy as jnp
-
     drv = BarrierDriver(n_shards=1)
     # phase 1: free
     summed = meta_allreduce(drv.flags(), mesh=None)

@@ -1,7 +1,5 @@
 """Content-deduplicated checkpointing (§4.6, Table 4)."""
 import numpy as np
-import jax.numpy as jnp
-import pytest
 
 from repro.core.checkpoint import CheckpointStore
 

@@ -1,8 +1,6 @@
 """Data pipeline determinism/resumability + optimizer unit tests."""
 import numpy as np
-import jax
 import jax.numpy as jnp
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import TrainConfig

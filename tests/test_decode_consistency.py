@@ -3,7 +3,6 @@ produce the same logits as re-running prefill on the extended prompt."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

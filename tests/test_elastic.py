@@ -1,6 +1,4 @@
 """Transparent elasticity (§5): work conservation and trajectory invariance."""
-import jax
-import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config

@@ -3,7 +3,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels.checksum.ops import _as_words, fingerprint
 from repro.kernels.checksum.ref import fingerprint_u32_ref

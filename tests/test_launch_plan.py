@@ -1,10 +1,9 @@
 """Dry-run planning logic (no 512-device lowering here — that's the sweep)."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import ASSIGNED_ARCHS
-from repro.configs.base import INPUT_SHAPES, get_shape
+from repro.configs.base import INPUT_SHAPES
 from repro.launch.mesh import make_local_mesh
 from repro.launch.specs import (SWA_VARIANT_WINDOW, decode_specs,
                                 input_specs, plan_pair, state_specs)

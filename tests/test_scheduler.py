@@ -1,9 +1,8 @@
 """Hierarchical scheduler + GPU-fraction SLA (§2.5, Table 1)."""
-import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.sla import HOUR, TIERS, GpuFractionAccount
+from repro.core.sla import TIERS, GpuFractionAccount
 from repro.scheduler.costs import CostModel, default_checkpoint_bytes
 from repro.scheduler.policy import ElasticPolicy, StaticGangPolicy
 from repro.scheduler.simulator import (FleetSimulator, SimConfig, make_fleet,
@@ -168,21 +167,30 @@ def test_costs_are_consumed():
 
 def test_downtime_matches_cost_model():
     """Realized downtime must equal the cost model's per-event charges:
-    migrations + resizes + restores exactly, plus repaid preempt debt for
-    at most the number of preemptions."""
+    migrations (priced by region pair — the default 2-region fleet has
+    exactly one cross pair) + resizes + restores exactly, plus repaid
+    preempt debt for at most the number of preemptions."""
     cfg = SimConfig(horizon_seconds=36 * 3600, migration_cost_seconds=60.0)
     sim = FleetSimulator(make_fleet(), synth_workload(120, 2048, seed=7),
                          ElasticPolicy(), cfg)
     res = sim.run()
-    costs = cfg.costs()
+    costs = sim.costs    # the topology-attached model actually charged
     cb = 0    # uniform model ignores checkpoint bytes
-    floor = (res.migrations * costs.migrate_seconds(cb)
+    intra = res.migrations - res.migrations_cross_region
+    intra_restores = res.restores - res.restores_cross_region
+    floor = (intra * costs.migrate_seconds(cb)
+             + res.migrations_cross_region
+             * costs.migrate_seconds(cb, "r0", "r1")
              + res.resizes * costs.resize_seconds(cb)
-             + res.restores * costs.restore_seconds(cb))
+             + intra_restores * costs.restore_seconds(cb)
+             + res.restores_cross_region
+             * costs.restore_seconds(cb, "r0", "r1"))
     ceil = floor + res.preemptions * costs.preempt_seconds(cb)
     total = sum(j.downtime_seconds for j in sim.jobs.values())
     assert floor - 1e-6 <= total <= ceil + 1e-6, (floor, total, ceil)
     assert abs(sum(res.downtime_by_tier.values()) - total) < 1e-6
+    # cross-region migrations are strictly pricier than intra ones
+    assert costs.migrate_seconds(cb, "r0", "r1") > costs.migrate_seconds(cb)
 
 
 def test_elastic_beats_static_with_costs_charged():

@@ -21,8 +21,6 @@ def _mesh22():
 def test_param_specs_megatron_convention():
     """Row-parallel down-projections shard the contracted dim over model."""
     import jax
-    mesh_devices = np.array(jax.devices()[:1] * 4).reshape(2, 2) \
-        if jax.device_count() < 4 else None
     # build a fake mesh object via make_mesh only when possible; otherwise
     # emulate with a 1x1 mesh and assert replicated specs
     mesh = jax.make_mesh((1, 1), ("data", "model"))

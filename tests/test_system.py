@@ -6,7 +6,6 @@ migrated to a different "cluster" with a different device count, and
 training continues — with zero lost work and an unchanged trajectory.
 """
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke_config
 from repro.configs.base import TrainConfig
