@@ -1,11 +1,18 @@
 """Scheduler throughput at planet scale: vectorized policy + event loop.
 
 The cost-aware ``ElasticPolicy`` runs its admission, expansion and
-placement passes as numpy lexsort/cumsum over job arrays; the simulator
-advances progress with numpy over an arrival-sorted active window.  This
-benchmark drives dense synthetic traces end to end and reports jobs/sec:
+placement passes as numpy lexsort/cumsum over job arrays, consults the
+fleet-wide ``FleetSLAAccounts`` ledger in ONE batched call per tick, and
+the simulator advances progress with numpy over an arrival-sorted active
+window.  This benchmark drives dense synthetic traces end to end and
+reports jobs/sec plus the decide-path seconds (time inside
+``policy.decide``):
 
-- ``vectorized``      — full trace, vectorized policy + vectorized loop.
+- ``vectorized``      — full trace, vectorized policy + vectorized loop,
+                        batched SLA ledger.
+- ``--no-sla-ledger`` — same, but per-job scalar SLA accounts (the PR 2
+                        baseline): the decide path falls back to one
+                        Python ``headroom`` query per guaranteed job.
 - ``scalar_policy``   — same trace, the pure-Python reference-oracle
                         policy (full run; the gap versus vectorized
                         grows with backlog depth).
@@ -15,17 +22,20 @@ benchmark drives dense synthetic traces end to end and reports jobs/sec:
                         cost grows with the live-job count).
 
 CLI (CI's bench-smoke job runs the 20k config; the 1M config is the
-planet-scale acceptance run):
+planet-scale acceptance run, with and without the ledger):
 
     PYTHONPATH=src python benchmarks/sched_scale.py \\
         --jobs 20000 --check-equivalence --json BENCH_sched.json
     PYTHONPATH=src python benchmarks/sched_scale.py \\
         --jobs 1000000 --regions 8 --clusters-per-region 8
+    PYTHONPATH=src python benchmarks/sched_scale.py \\
+        --jobs 1000000 --regions 8 --clusters-per-region 8 --no-sla-ledger
 
 ``--check-equivalence`` re-runs the whole trace under the scalar
-reference policy and exits non-zero unless both the aggregates and the
-hash of the full decision sequence match the vectorized run exactly —
-the CI gate that keeps the numpy passes honest.
+reference policy (fairness aging enabled in both, as in production) and
+exits non-zero unless both the aggregates and the hash of the full
+decision sequence match the vectorized run exactly — the CI gate that
+keeps the numpy passes honest.
 
 Harness entry point (``python -m benchmarks.run --only sched_scale``)
 keeps the historical 50k rows.
@@ -83,28 +93,40 @@ def _horizon(n_jobs: int, fleet_gpus: int) -> float:
     return max(24 * 3600.0, 1.25 * span + 12 * 3600.0)
 
 
-class _RecordingPolicy:
-    """Wraps a policy and folds every Decision into a running digest, so
-    the equivalence gate compares the full decision sequences — not just
-    end-of-run aggregates that could mask compensating divergences."""
+class _TimedPolicy:
+    """Wraps a policy, accumulating wall time spent inside ``decide`` (the
+    decide-path metric) and — when ``digest`` is on — folding every
+    Decision into a running hash, so the equivalence gate compares the
+    full decision sequences, not just end-of-run aggregates that could
+    mask compensating divergences."""
 
-    def __init__(self, inner):
+    def __init__(self, inner, digest: bool = False):
         self.inner = inner
         self.name = inner.name
-        self._digest = hashlib.sha256()
+        self.decide_seconds = 0.0
+        self._digest = hashlib.sha256() if digest else None
 
     def bind_costs(self, cost_model, interval_hint) -> None:
         self.inner.bind_costs(cost_model, interval_hint)
 
     def decide(self, now, jobs, fleet):
+        t0 = time.perf_counter()
         decision = self.inner.decide(now, jobs, fleet)
-        payload = repr(
-            (sorted(decision.alloc.items()), decision.preemptions, decision.migrations)
-        )
-        self._digest.update(payload.encode())
+        self.decide_seconds += time.perf_counter() - t0
+        if self._digest is not None:
+            payload = repr(
+                (
+                    sorted(decision.alloc.items()),
+                    decision.preemptions,
+                    decision.migrations,
+                )
+            )
+            self._digest.update(payload.encode())
         return decision
 
     def digest(self) -> str:
+        if self._digest is None:
+            raise ValueError("digest disabled: construct with digest=True")
         return self._digest.hexdigest()
 
 
@@ -129,17 +151,16 @@ def bench(
     gpus_per_cluster: int,
     check_equivalence: bool,
     json_path: Optional[str],
+    sla_ledger: bool = True,
 ) -> Dict:
     fleet = _fleet(regions, clusters_per_region, gpus_per_cluster)
     horizon = _horizon(n_jobs, fleet.total())
-    policy = ElasticPolicy()
-    if check_equivalence:
-        policy = _RecordingPolicy(policy)
+    policy = _TimedPolicy(ElasticPolicy(), digest=check_equivalence)
     sim = FleetSimulator(
         fleet,
         _trace(n_jobs, fleet.total()),
         policy,
-        SimConfig(horizon_seconds=horizon),
+        SimConfig(horizon_seconds=horizon, sla_ledger=sla_ledger),
     )
     t0 = time.perf_counter()
     res = sim.run()
@@ -149,13 +170,17 @@ def bench(
         "fleet_gpus": fleet.total(),
         "wall_seconds": wall,
         "jobs_per_sec": n_jobs / wall,
+        "decide_seconds": policy.decide_seconds,
+        "sla_ledger": sla_ledger,
         "events": sim.events_processed,
         "equivalence": "skipped",
         **_result_signature(res),
     }
     msg = (
-        f"vectorized: {n_jobs} jobs in {wall:.1f}s "
-        f"({out['jobs_per_sec']:.0f} jobs/sec), "
+        f"vectorized[ledger={'on' if sla_ledger else 'off'}]: "
+        f"{n_jobs} jobs in {wall:.1f}s "
+        f"({out['jobs_per_sec']:.0f} jobs/sec, "
+        f"decide-path {policy.decide_seconds:.1f}s), "
         f"util={res.utilization:.3f} done={res.completed} "
         f"dead={res.gpu_seconds_dead / 3600:.0f} gpu-h "
         f"migr={res.migrations} ({res.migrations_cross_region} cross)"
@@ -164,12 +189,12 @@ def bench(
 
     if check_equivalence:
         fleet2 = _fleet(regions, clusters_per_region, gpus_per_cluster)
-        ref_policy = _RecordingPolicy(ElasticPolicy(vectorized=False))
+        ref_policy = _TimedPolicy(ElasticPolicy(vectorized=False), digest=True)
         ref = FleetSimulator(
             fleet2,
             _trace(n_jobs, fleet2.total()),
             ref_policy,
-            SimConfig(horizon_seconds=horizon),
+            SimConfig(horizon_seconds=horizon, sla_ledger=sla_ledger),
         )
         ref_res = ref.run()
         a, b = _result_signature(res), _result_signature(ref_res)
@@ -206,11 +231,12 @@ def run() -> List[Dict]:
     fleet = _fleet()
     horizon = _horizon(n_jobs, fleet.total())
 
-    # -- vectorized policy + loop, full trace -----------------------------
+    # -- vectorized policy + loop + batched SLA ledger, full trace --------
+    timed = _TimedPolicy(ElasticPolicy())
     sim = FleetSimulator(
         fleet,
         _trace(n_jobs, fleet.total()),
-        ElasticPolicy(),
+        timed,
         SimConfig(horizon_seconds=horizon),
     )
     t0 = time.perf_counter()
@@ -218,6 +244,7 @@ def run() -> List[Dict]:
     vec_wall = time.perf_counter() - t0
     derived = (
         f"jobs_per_sec={n_jobs / vec_wall:.0f};"
+        f"decide_s={timed.decide_seconds:.1f};"
         f"events={sim.events_processed};"
         f"done={res.completed}/{res.total_jobs};"
         f"util={res.utilization:.3f}"
@@ -230,13 +257,40 @@ def run() -> List[Dict]:
         }
     )
 
-    # -- scalar reference policy, full trace (fast enough to measure) ----
+    # -- same, per-job scalar SLA accounts (PR 2 decide-path baseline) ----
+    fleet_nl = _fleet()
+    timed_nl = _TimedPolicy(ElasticPolicy())
+    sim_nl = FleetSimulator(
+        fleet_nl,
+        _trace(n_jobs, fleet_nl.total()),
+        timed_nl,
+        SimConfig(horizon_seconds=horizon, sla_ledger=False),
+    )
+    t0 = time.perf_counter()
+    sim_nl.run()
+    nl_wall = time.perf_counter() - t0
+    derived = (
+        f"jobs_per_sec={n_jobs / nl_wall:.0f};"
+        f"decide_s={timed_nl.decide_seconds:.1f};"
+        f"decide_speedup_ledger="
+        f"{timed_nl.decide_seconds / max(timed.decide_seconds, 1e-9):.2f}x"
+    )
+    rows.append(
+        {
+            "name": "sched_scale/scalar_accounts_50k",
+            "us_per_call": nl_wall * 1e6,
+            "derived": derived,
+        }
+    )
+
+    # -- scalar reference policy, full trace (fast enough to measure);
+    #    scalar accounts too, so the row stays the PR 2 baseline --------
     fleet_s = _fleet()
     scalar = FleetSimulator(
         fleet_s,
         _trace(n_jobs, fleet_s.total()),
         ElasticPolicy(vectorized=False),
-        SimConfig(horizon_seconds=horizon),
+        SimConfig(horizon_seconds=horizon, sla_ledger=False),
     )
     t0 = time.perf_counter()
     scalar.run()
@@ -260,7 +314,10 @@ def run() -> List[Dict]:
         fleet_i,
         _trace(n_jobs, fleet_i.total()),
         ElasticPolicy(vectorized=False),
-        SimConfig(horizon_seconds=LEGACY_HORIZON, vectorized=False),
+        # seed configuration throughout: per-event loop, scalar accounts
+        SimConfig(
+            horizon_seconds=LEGACY_HORIZON, vectorized=False, sla_ledger=False
+        ),
     )
     t0 = time.perf_counter()
     legacy.run()
@@ -305,6 +362,12 @@ def main(argv: Optional[List[str]] = None) -> int:
         "results match exactly",
     )
     parser.add_argument(
+        "--no-sla-ledger",
+        action="store_true",
+        help="use per-job scalar SLA accounts instead of the batched "
+        "fleet ledger (the PR 2 decide-path baseline)",
+    )
+    parser.add_argument(
         "--harness",
         action="store_true",
         help="print the benchmark-harness CSV rows instead",
@@ -322,6 +385,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         args.gpus_per_cluster,
         args.check_equivalence,
         args.json,
+        sla_ledger=not args.no_sla_ledger,
     )
     return 1 if out["equivalence"] == "FAILED" else 0
 

@@ -9,7 +9,9 @@
 - ``checkpoint``    — content-deduped consistent checkpoints (§4, §4.6)
 - ``elastic``       — transparent elastic runtime over the spliced step (§5)
 - ``migration``     — preempt -> dump -> transfer -> restore flow (§4.5)
-- ``sla``           — GPU-fraction SLA tiers and accounting (§2.5)
+- ``sla``           — GPU-fraction SLA tiers and accounting (§2.5):
+                      scalar per-job accounts + the vectorized
+                      fleet-wide struct-of-arrays ledger
 """
 from repro.core.barrier import (  # noqa: F401
     BarrierResult,
@@ -26,7 +28,13 @@ from repro.core.device_proxy import (  # noqa: F401
 )
 from repro.core.elastic import ElasticRuntime  # noqa: F401
 from repro.core.migration import MigrationReport, checkpoint_job, migrate  # noqa: F401
-from repro.core.sla import TIERS, GpuFractionAccount, SLATier  # noqa: F401
+from repro.core.sla import (  # noqa: F401
+    TIERS,
+    FleetSLAAccounts,
+    FleetSlotAccount,
+    GpuFractionAccount,
+    SLATier,
+)
 from repro.core.splicing import SplicedDevice, SplicedTrainer, SpliceMetrics  # noqa: F401
 from repro.core.validation import (  # noqa: F401
     ValidationReport,

@@ -11,8 +11,11 @@ The decisions come from the SAME ``ElasticPolicy.decide`` the simulator
 exercises — the executor adapts its slot capacity to a one-cluster
 ``Fleet`` and mirrors each managed job as a scheduler ``Job`` (the
 workload-scope shadow: arrival order, SLA account, allocation state).
-One policy, two mechanism back-ends; simulated results and real-mechanism
-results can no longer drift apart.
+The shadows' SLA accounts live in the same ``FleetSLAAccounts`` ledger
+the simulator uses, recorded in one batched call per tick, so the policy
+consults identical machinery under both back-ends.  One policy, two
+mechanism back-ends; simulated results and real-mechanism results can no
+longer drift apart.
 
 Capacity is counted in "device slots"; each job's logical world size stays
 constant while its physical allocation follows the policy, rounded to the
@@ -23,11 +26,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
+import numpy as np
+
 from repro.configs import get_smoke_config
 from repro.configs.base import TrainConfig
 from repro.core.checkpoint import CheckpointStore
 from repro.core.elastic import ElasticRuntime
 from repro.core.migration import checkpoint_job
+from repro.core.sla import FleetSLAAccounts, FleetSlotAccount
 from repro.scheduler.costs import CostModel
 from repro.scheduler.policy import ElasticPolicy
 from repro.scheduler.types import Cluster, Fleet, Job, Region
@@ -38,7 +44,7 @@ class ManagedJob:
     id: str
     tier: str
     arch: str
-    world_size: int            # logical (constant) = demanded devices
+    world_size: int  # logical (constant) = demanded devices
     total_steps: int
     runtime: Optional[ElasticRuntime] = None
     allocated: int = 0
@@ -62,10 +68,14 @@ def _largest_divisor_leq(world: int, cap: int) -> int:
 class FleetExecutor:
     """A single-host fleet of real elastic jobs under tiered scheduling."""
 
-    def __init__(self, total_slots: int, seed: int = 0,
-                 policy: Optional[ElasticPolicy] = None,
-                 tick_seconds: float = 60.0,
-                 cost_model: Optional[CostModel] = None):
+    def __init__(
+        self,
+        total_slots: int,
+        seed: int = 0,
+        policy: Optional[ElasticPolicy] = None,
+        tick_seconds: float = 60.0,
+        cost_model: Optional[CostModel] = None,
+    ):
         self.total_slots = total_slots
         self.jobs: Dict[str, ManagedJob] = {}
         self.store = CheckpointStore()
@@ -77,42 +87,52 @@ class FleetExecutor:
         self.cost_model = cost_model or CostModel()
         if hasattr(self.policy, "bind_costs"):
             self.policy.bind_costs(self.cost_model, tick_seconds)
-        self.fleet = Fleet([Region("local", [
-            Cluster("local", "local", total_slots)])])
+        # shadow accounts live in a shared fleet ledger, like the simulator's
+        self.sla = FleetSLAAccounts()
+        self.fleet = Fleet(
+            [Region("local", [Cluster("local", "local", total_slots)])],
+            sla=self.sla,
+        )
         self.tick_seconds = tick_seconds
         self.clock = 0.0
-        self._shadows: Dict[str, Job] = {}    # workload-scope policy mirrors
+        self._shadows: Dict[str, Job] = {}  # workload-scope policy mirrors
 
     # ------------------------------------------------------------ admission
-    def submit(self, job: ManagedJob, global_batch: int = 8,
-               seq_len: int = 32) -> None:
+    def submit(
+        self, job: ManagedJob, global_batch: int = 8, seq_len: int = 32
+    ) -> None:
         cfg = get_smoke_config(job.arch)
-        tcfg = TrainConfig(total_steps=job.total_steps, warmup_steps=1,
-                           learning_rate=1e-3)
-        job.runtime = ElasticRuntime(cfg, tcfg, job.world_size,
-                                     job.world_size, global_batch, seq_len)
+        tcfg = TrainConfig(
+            total_steps=job.total_steps, warmup_steps=1, learning_rate=1e-3
+        )
+        job.runtime = ElasticRuntime(
+            cfg, tcfg, job.world_size, job.world_size, global_batch, seq_len
+        )
         job._cfg, job._tcfg = cfg, tcfg
         job._gb, job._sl = global_batch, seq_len
         self.jobs[job.id] = job
         # scheduler-facing mirror: demand = logical world, splice floor 1
         self._shadows[job.id] = Job(
-            id=job.id, tier=job.tier, demand_gpus=job.world_size,
+            id=job.id,
+            tier=job.tier,
+            demand_gpus=job.world_size,
             gpu_hours=job.total_steps * job.world_size / 3600.0,
-            arrival=self.clock, min_gpus=1)
+            arrival=self.clock,
+            min_gpus=1,
+            account=FleetSlotAccount(self.sla, job.tier, job.world_size),
+        )
 
     # ------------------------------------------------------------ policy
     def _decide_allocations(self) -> Dict[str, int]:
         """Run the unified ``ElasticPolicy`` over the one-cluster fleet and
         round each target to the splice constraint (divisor of world)."""
-        shadows = [self._shadows[jid] for jid, j in self.jobs.items()
-                   if not j.done]
+        shadows = [self._shadows[jid] for jid, j in self.jobs.items() if not j.done]
         decision = self.policy.decide(self.clock, shadows, self.fleet)
         alloc: Dict[str, int] = {}
         free = self.total_slots
         for s in sorted(shadows, key=lambda s: -decision.alloc[s.id][0]):
             target, _ = decision.alloc[s.id]
-            give = _largest_divisor_leq(self.jobs[s.id].world_size,
-                                        min(target, free))
+            give = _largest_divisor_leq(self.jobs[s.id].world_size, min(target, free))
             alloc[s.id] = give
             free -= give
         return alloc
@@ -134,30 +154,38 @@ class FleetExecutor:
                 job.preemptions += 1
                 # the shadow carries the preempt cost as restore debt, so
                 # the policy's restart gates price this job's re-admission
-                # exactly like the simulator would
+                # exactly like the simulator would; it also re-enters the
+                # queue now, which is when fairness aging starts accruing
                 shadow = self._shadows[jid]
                 shadow.restore_debt += self.cost_model.preempt_seconds(
-                    shadow.checkpoint_bytes)
+                    shadow.checkpoint_bytes
+                )
+                shadow.queued_since = self.clock
                 self.log.append({"event": "preempt", "job": jid})
             elif target > 0 and job.allocated == 0 and job.runtime is None:
                 # REAL re-admission: restore from the deduped store
                 self._shadows[jid].restore_debt = 0.0
                 device, host, step = self.store.restore(jid)
                 job.runtime = ElasticRuntime.from_snapshot(
-                    job._cfg, job._tcfg,
-                    {"state": device[0], "pipeline": host[0]["pipeline"],
-                     "world_size": host[0]["world_size"]},
-                    target, job._gb, job._sl)
+                    job._cfg,
+                    job._tcfg,
+                    {
+                        "state": device[0],
+                        "pipeline": host[0]["pipeline"],
+                        "world_size": host[0]["world_size"],
+                    },
+                    target,
+                    job._gb,
+                    job._sl,
+                )
                 assert int(job.runtime.state["step"]) == job.steps_done
-                self.log.append({"event": "restore", "job": jid,
-                                 "at_step": step})
+                self.log.append({"event": "restore", "job": jid, "at_step": step})
             elif target > 0 and job.runtime is not None:
                 if job.runtime.physical != target:
                     job.runtime.resize(target)  # REAL transparent resize
-                    if job.allocated > 0:       # admission is not a resize
+                    if job.allocated > 0:  # admission is not a resize
                         job.resizes += 1
-                        self.log.append({"event": "resize", "job": jid,
-                                         "to": target})
+                        self.log.append({"event": "resize", "job": jid, "to": target})
             job.allocated = target
             shadow = self._shadows[jid]
             shadow.allocated = target
@@ -169,12 +197,18 @@ class FleetExecutor:
     def tick(self, steps: int = 1) -> None:
         """One scheduling round: decide, apply, advance running jobs."""
         self._apply(self._decide_allocations())
-        # the shadows' SLA accounts see the interval we are about to run
-        for jid, shadow in self._shadows.items():
-            if shadow.done_at is None:
-                shadow.account.record(self.clock,
-                                      self.clock + self.tick_seconds,
-                                      shadow.allocated)
+        # the shadows' SLA accounts see the interval we are about to run —
+        # one batched record into the fleet ledger
+        live = [s for s in self._shadows.values() if s.done_at is None]
+        if live:
+            slots = np.array([s.account.ensure_slot() for s in live], np.int64)
+            m = len(live)
+            self.sla.record_batch(
+                slots,
+                np.full(m, self.clock),
+                np.full(m, self.clock + self.tick_seconds),
+                np.array([s.allocated for s in live], np.int64),
+            )
         self.clock += self.tick_seconds
         for job in self.jobs.values():
             if job.done or job.runtime is None or job.allocated == 0:
@@ -188,8 +222,10 @@ class FleetExecutor:
                 shadow = self._shadows[job.id]
                 shadow.done_at = self.clock
                 shadow.allocated = 0
-                self.log.append({"event": "done", "job": job.id,
-                                 "steps": job.steps_done})
+                shadow.account.release()
+                self.log.append(
+                    {"event": "done", "job": job.id, "steps": job.steps_done}
+                )
 
     def run(self, max_ticks: int = 100) -> List[Dict]:
         for _ in range(max_ticks):

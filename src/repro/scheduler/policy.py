@@ -7,7 +7,7 @@ anywhere in the fleet), (b) shrinks before it preempts, preempts strictly
 by tier, (c) defragments by migrating small jobs to open contiguous
 capacity for large arrivals, all while respecting GPU-fraction SLAs.
 
-Two properties distinguish it from the seed policy:
+Three properties distinguish it from the seed policy:
 
 **Cost-aware.**  When a ``CostModel`` is attached (the simulator and the
 executor thread theirs in automatically), decisions weigh the mechanisms'
@@ -31,9 +31,23 @@ real downtime instead of treating them as free:
   model prices cross-region migrations at the slower inter-region blob
   tier.
 
+**Fair under permanent overload.**  Victim ranking alone lets a queued
+guaranteed job starve forever behind running peers that are expensive to
+stop.  Admission-order *fairness aging* fixes that: a guaranteed job
+queued longer than ``aging_threshold_intervals`` scheduling intervals
+accrues a bonus of ``aging_rate`` cost-seconds per excess second queued,
+and competes in the running-job class with that bonus as its score — once
+the bonus exceeds a running peer's preempt+restore downtime, the aged job
+is admitted ahead of it.  When the queue drains (or within the
+threshold), the ordering is exactly the unaged one, so aging is a no-op
+on healthy fleets.
+
 **Vectorized.**  ``decide`` runs as numpy array passes — lexsort for the
-admission/expansion/placement orders, cumsum-based greedy capacity fits —
-so million-job traces clear in minutes (``benchmarks/sched_scale.py``).
+admission/expansion/placement orders, cumsum-based greedy capacity fits,
+and one batched ``FleetSLAAccounts.headroom_all`` call for the SLA state
+of every guaranteed job (no per-job account queries remain on the decide
+path when jobs carry ledger-backed accounts) — so million-job traces
+clear in minutes (``benchmarks/sched_scale.py``).
 ``ElasticPolicy(vectorized=False)`` keeps a pure-Python reference oracle
 with identical semantics; ``tests/test_policy_equivalence.py`` proves the
 two paths emit byte-identical decisions on random fleets.
@@ -49,7 +63,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.sla import TIERS
+from repro.core.sla import TIERS, FleetSlotAccount
 from repro.scheduler.costs import CostModel
 from repro.scheduler.types import Fleet, Job
 
@@ -144,10 +158,27 @@ def _greedy_take(
     return gives, remaining
 
 
+def _shared_ledger(accs: list):
+    """(ledger, slots) when every account is a view on one
+    ``FleetSLAAccounts``; (None, None) otherwise (mixed or scalar
+    accounts fall back to the per-job oracle loop)."""
+    ledger = None
+    slots = np.empty(len(accs), np.int64)
+    for k, acc in enumerate(accs):
+        if not isinstance(acc, FleetSlotAccount):
+            return None, None
+        if ledger is None:
+            ledger = acc.ledger
+        elif acc.ledger is not ledger:
+            return None, None
+        slots[k] = acc.slot
+    return ledger, slots
+
+
 class ElasticPolicy:
     """Singularity's policy: SLA-tiered, shrink-before-preempt, elastic
     expansion into spare capacity, migration-based defragmentation —
-    cost-aware and vectorized (see module docstring)."""
+    cost-aware, aging-fair and vectorized (see module docstring)."""
 
     name = "elastic"
 
@@ -157,6 +188,8 @@ class ElasticPolicy:
         cost_model: Optional[CostModel] = None,
         interval_hint: Optional[float] = None,
         vectorized: bool = True,
+        aging_rate: float = 1.0,
+        aging_threshold_intervals: float = 12.0,
     ):
         self.expand_factor = expand_factor
         # threaded in by FleetSimulator/FleetExecutor when left unset, so
@@ -164,6 +197,11 @@ class ElasticPolicy:
         self.cost_model = cost_model
         self.interval_hint = interval_hint
         self.vectorized = vectorized
+        # fairness aging: a guaranteed job queued longer than
+        # aging_threshold_intervals ticks accrues aging_rate cost-seconds
+        # of admission credit per excess second; 0 disables aging
+        self.aging_rate = aging_rate
+        self.aging_threshold_intervals = aging_threshold_intervals
         self._bound_cost = False
         self._bound_interval = False
 
@@ -209,8 +247,9 @@ class ElasticPolicy:
         if self.cost_model is None or j.allocated <= 0:
             return 0.0
         cb = j.checkpoint_bytes
-        return self.cost_model.preempt_seconds(cb) \
-            + self.cost_model.restore_seconds(cb)
+        return self.cost_model.preempt_seconds(cb) + self.cost_model.restore_seconds(
+            cb
+        )
 
     def _restart_cost(self, j: Job) -> float:
         """Downtime a restart/resize of this job would charge right now.
@@ -223,10 +262,7 @@ class ElasticPolicy:
         if j.allocated > 0:
             return self.cost_model.resize_seconds(j.checkpoint_bytes)
         if j.ever_ran:
-            return (
-                self.cost_model.restore_seconds(j.checkpoint_bytes)
-                + j.restore_debt
-            )
+            return self.cost_model.restore_seconds(j.checkpoint_bytes) + j.restore_debt
         return 0.0
 
     def decide(self, now: float, jobs: List[Job], fleet: Fleet) -> Decision:
@@ -245,7 +281,7 @@ class ElasticPolicy:
         interval = self._interval()
         cm = self.cost_model
         # one pass over the job objects: all numeric state in a single
-        # (n, 7) array (exact in float64 — GPU counts and byte sizes are
+        # (n, 8) array (exact in float64 — GPU counts and byte sizes are
         # far below 2**53), tier attributes via code lookup tables
         base = np.array(
             [
@@ -257,27 +293,37 @@ class ElasticPolicy:
                     j.checkpoint_bytes,
                     j.restore_debt,
                     _TIER_CODE[j.tier],
+                    j.queued_since,
                 )
                 for j in active
             ],
             dtype=np.float64,
-        ).reshape(n, 7)
+        ).reshape(n, 8)
         demand = base[:, 0].astype(np.int64)
         min_g = base[:, 1].astype(np.int64)
         alloc0 = base[:, 2].astype(np.int64)
         arrival = base[:, 3]
         tcode = base[:, 6].astype(np.int64)
+        qsince = base[:, 7]
         prio = _TIER_PRIO[tcode]
         sup = _TIER_SUP[tcode]
         gfrac = _TIER_GFRAC[tcode]
         running = alloc0 > 0
         guar = gfrac > 0.0
 
-        # SLA headroom: the one per-job Python consultation (the accounts
-        # are stateful O(log n) query objects); everything below is arrays
+        # SLA headroom: ONE batched ledger query when the guaranteed jobs
+        # carry FleetSLAAccounts-backed accounts (the production setup);
+        # hand-built jobs with scalar accounts fall back to the oracle loop
         head = np.full(n, np.inf)
-        for i in np.flatnonzero(guar):
-            head[i] = active[i].account.headroom(now)
+        gidx = np.flatnonzero(guar)
+        if gidx.size:
+            gaccs = [active[i].account for i in gidx]
+            ledger, slots = _shared_ledger(gaccs)
+            if ledger is not None:
+                head[gidx] = ledger.headroom_all(now, slots, gfrac[gidx])
+            else:
+                for k, i in enumerate(gidx):
+                    head[i] = gaccs[k].headroom(now)
         shrunk = np.maximum(
             min_g, (demand * np.minimum(1.0, gfrac + 0.1)).astype(np.int64)
         )
@@ -301,18 +347,36 @@ class ElasticPolicy:
             )
             vcost = np.where(running, pre_s + rest_s, 0.0)
             restart = np.where(
-                running, resize_s, np.where(
+                running,
+                resize_s,
+                np.where(
                     np.fromiter((j.ever_ran for j in active), bool, n),
-                    rest_s + debt, 0.0,
-                )
+                    rest_s + debt,
+                    0.0,
+                ),
             )
 
         idx = np.arange(n)
-        queued = (~running).astype(np.int64)
-        # admission order: tier first; within a tier keep running jobs
-        # ahead of queued ones ranked by how expensive they are to stop,
-        # then FIFO (lexsort: last key is primary)
-        order_a = np.lexsort((idx, arrival, -vcost, queued, -prio))
+        # fairness aging: a guaranteed job queued past the threshold joins
+        # the running-job class, scored by its accrued bonus against the
+        # running peers' preempt+restore downtime
+        wait = now - qsince
+        threshold = self.aging_threshold_intervals * interval
+        if self.aging_rate > 0.0:
+            aged = (~running) & guar & (wait > threshold)
+        else:
+            aged = np.zeros(n, dtype=bool)
+        score = np.where(
+            running,
+            vcost,
+            np.where(aged, self.aging_rate * (wait - threshold), 0.0),
+        )
+        waiting = (~(running | aged)).astype(np.int64)
+        # admission order: tier first; within a tier the running jobs and
+        # aged long-queued jobs come ahead of the plain queue, ranked by
+        # how expensive they are to stop (or how starved they are), then
+        # FIFO (lexsort: last key is primary)
+        order_a = np.lexsort((idx, arrival, -score, waiting, -prio))
         total = fleet.total()
         galloc = np.zeros(n, dtype=np.int64)
 
@@ -357,7 +421,9 @@ class ElasticPolicy:
             order_s = np.lexsort((idx, sup))
             g3, rem = _greedy_take(
                 np.where(cand3, extra, 0)[order_s],
-                np.ones(n, dtype=np.int64)[order_s], rem, True,
+                np.ones(n, dtype=np.int64)[order_s],
+                rem,
+                True,
             )
             galloc[order_s] += g3
 
@@ -407,18 +473,13 @@ class ElasticPolicy:
         regions = {r.id: k for k, r in enumerate(fleet.regions)}
         creg = np.fromiter(
             (regions[fleet.region_of(c.id)] for c in clusters),
-            np.int64, len(clusters),
+            np.int64,
+            len(clusters),
         )
-        jcl = np.fromiter(
-            (cid_index.get(j.cluster, -1) for j in active), np.int64, n
-        )
-        has_cluster = np.fromiter(
-            (j.cluster is not None for j in active), bool, n
-        )
+        jcl = np.fromiter((cid_index.get(j.cluster, -1) for j in active), np.int64, n)
+        has_cluster = np.fromiter((j.cluster is not None for j in active), bool, n)
         jreg = np.where(jcl >= 0, creg[np.maximum(jcl, 0)], -1)
-        free = np.fromiter(
-            (c.total_gpus for c in clusters), np.int64, len(clusters)
-        )
+        free = np.fromiter((c.total_gpus for c in clusters), np.int64, len(clusters))
         idx = np.arange(n)
         # guaranteed tiers and large allocations place first so basic
         # absorbs fragmentation
@@ -487,19 +548,37 @@ class ElasticPolicy:
         need = [self._required(now, j) for j in active]
         head = [
             active[i].account.headroom(now)
-            if TIERS[active[i].tier].gpu_fraction > 0 else float("inf")
+            if TIERS[active[i].tier].gpu_fraction > 0
+            else float("inf")
             for i in range(n)
         ]
         vcost = [self._victim_cost(j) for j in active]
         restart = [self._restart_cost(j) for j in active]
         running = [j.allocated > 0 for j in active]
 
+        # fairness aging, same formula as the vectorized path
+        threshold = self.aging_threshold_intervals * interval
+        wait = [now - j.queued_since for j in active]
+        aged = [
+            self.aging_rate > 0.0
+            and not running[i]
+            and TIERS[active[i].tier].gpu_fraction > 0
+            and wait[i] > threshold
+            for i in range(n)
+        ]
+        score = [
+            vcost[i]
+            if running[i]
+            else (self.aging_rate * (wait[i] - threshold) if aged[i] else 0.0)
+            for i in range(n)
+        ]
+
         order_a = sorted(
             range(n),
             key=lambda i: (
                 -TIERS[active[i].tier].preempt_priority,
-                0 if running[i] else 1,
-                -vcost[i],
+                0 if (running[i] or aged[i]) else 1,
+                -score[i],
                 active[i].arrival,
                 i,
             ),
@@ -548,10 +627,10 @@ class ElasticPolicy:
                 extra = int(active[i].demand_gpus * (self.expand_factor - 1))
                 if extra <= 0:
                     continue
-                if cm is not None and running[i] \
-                        and galloc[i] == active[i].allocated:
-                    burn = cm.resize_seconds(active[i].checkpoint_bytes) \
-                        * float(galloc[i] + extra)
+                if cm is not None and running[i] and galloc[i] == active[i].allocated:
+                    burn = cm.resize_seconds(active[i].checkpoint_bytes) * float(
+                        galloc[i] + extra
+                    )
                     if not burn < float(extra) * interval:
                         continue
                 give = min(extra, total - used)
@@ -575,14 +654,15 @@ class ElasticPolicy:
         order_p = sorted(
             range(n),
             key=lambda i: (
-                -TIERS[active[i].tier].preempt_priority, -galloc[i], i,
+                -TIERS[active[i].tier].preempt_priority,
+                -galloc[i],
+                i,
             ),
         )
         placements: Dict[int, str] = {}
         for i in order_p:
             j = active[i]
-            if galloc[i] > 0 and j.cluster in free \
-                    and free[j.cluster] >= galloc[i]:
+            if galloc[i] > 0 and j.cluster in free and free[j.cluster] >= galloc[i]:
                 placements[i] = j.cluster
                 free[j.cluster] -= galloc[i]
         migrations = set()
@@ -614,9 +694,7 @@ class ElasticPolicy:
             if running[i] and j.cluster is not None and cid != j.cluster:
                 migrations.add(i)
 
-        final = {
-            active[i].id: (galloc[i], placements.get(i)) for i in range(n)
-        }
+        final = {active[i].id: (galloc[i], placements.get(i)) for i in range(n)}
         return Decision(
             alloc=final,
             preemptions=sorted(active[i].id for i in preempted),

@@ -19,10 +19,14 @@ Two faithfulness properties the seed simulator lacked:
    per-cluster capacity conservation after every decision.
 
 The default event loop is vectorized: job progress is advanced with
-numpy over an arrival-sorted active window, so 50k–100k-job traces run
-in seconds.  ``SimConfig(vectorized=False)`` keeps the seed's O(jobs)
-per-event Python loop for apples-to-apples throughput comparisons
-(``benchmarks/sched_scale.py``).
+numpy over an arrival-sorted active window, and SLA delivery is recorded
+into the fleet-wide ``FleetSLAAccounts`` ledger in two batched calls per
+tick (the simulator swaps each job's scalar account for a ledger-backed
+view at construction; ``SimConfig(sla_ledger=False)`` keeps per-job
+scalar accounts for benchmarking the difference).  50k–100k-job traces
+run in seconds.  ``SimConfig(vectorized=False)`` keeps the seed's
+O(jobs) per-event Python loop for apples-to-apples throughput
+comparisons (``benchmarks/sched_scale.py``).
 """
 from __future__ import annotations
 
@@ -31,7 +35,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.sla import TIERS
+from repro.core.sla import TIERS, FleetSLAAccounts, FleetSlotAccount, GpuFractionAccount
 from repro.scheduler.costs import CostModel, RegionTopology
 from repro.scheduler.policy import Decision
 from repro.scheduler.types import Cluster, Fleet, Job, Region
@@ -45,12 +49,15 @@ class SimConfig:
     # uniform per-event charges; ``cost_model`` (when set) derives per-job
     # costs from checkpoint size / bandwidth / barrier latency instead.
     migration_cost_seconds: float = 60.0
-    preemption_cost_seconds: Optional[float] = None   # default: migration/2
-    restore_cost_seconds: Optional[float] = None      # default: migration/2
-    resize_cost_seconds: Optional[float] = None       # default: migration/6
+    preemption_cost_seconds: Optional[float] = None  # default: migration/2
+    restore_cost_seconds: Optional[float] = None  # default: migration/2
+    resize_cost_seconds: Optional[float] = None  # default: migration/6
     cost_model: Optional[CostModel] = None
-    vectorized: bool = True     # False = seed-style O(jobs)-per-event loop
-    validate: bool = True       # capacity-conservation asserts per decision
+    vectorized: bool = True  # False = seed-style O(jobs)-per-event loop
+    validate: bool = True  # capacity-conservation asserts per decision
+    # False = keep per-job scalar GpuFractionAccounts (the PR 2 baseline)
+    # instead of the batched FleetSLAAccounts ledger
+    sla_ledger: bool = True
 
     def costs(self) -> CostModel:
         if self.cost_model is not None:
@@ -59,7 +66,8 @@ class SimConfig:
             self.migration_cost_seconds,
             preemption_cost_seconds=self.preemption_cost_seconds,
             restore_cost_seconds=self.restore_cost_seconds,
-            resize_cost_seconds=self.resize_cost_seconds)
+            resize_cost_seconds=self.resize_cost_seconds,
+        )
 
 
 @dataclasses.dataclass
@@ -72,29 +80,35 @@ class SimResult:
     preemptions: int
     migrations: int
     resizes: int
-    queue_seconds: float          # total job-seconds spent fully queued
+    queue_seconds: float  # total job-seconds spent fully queued
     gpu_seconds_idle: float
     restores: int = 0
-    gpu_seconds_dead: float = 0.0          # allocated but making no progress
+    gpu_seconds_dead: float = 0.0  # allocated but making no progress
     downtime_by_tier: Dict[str, float] = dataclasses.field(default_factory=dict)
-    migrations_cross_region: int = 0       # subset of migrations that moved region
-    restores_cross_region: int = 0         # subset of restores that moved region
+    migrations_cross_region: int = 0  # subset of migrations that moved region
+    restores_cross_region: int = 0  # subset of restores that moved region
 
     def summary(self) -> str:
         sla = ", ".join(f"{t}={v:.3f}" for t, v in self.sla_attainment.items())
-        down = ", ".join(f"{t}={v / 3600:.1f}h"
-                         for t, v in self.downtime_by_tier.items())
-        return (f"util={self.utilization:.3f} sla[{sla}] "
-                f"done={self.completed}/{self.total_jobs} "
-                f"preempt={self.preemptions} migr={self.migrations} "
-                f"(cross={self.migrations_cross_region}) "
-                f"resize={self.resizes} restore={self.restores} "
-                f"downtime[{down}]")
+        down = ", ".join(
+            f"{t}={v / 3600:.1f}h" for t, v in self.downtime_by_tier.items()
+        )
+        return (
+            f"util={self.utilization:.3f} sla[{sla}] "
+            f"done={self.completed}/{self.total_jobs} "
+            f"preempt={self.preemptions} migr={self.migrations} "
+            f"(cross={self.migrations_cross_region}) "
+            f"resize={self.resizes} restore={self.restores} "
+            f"downtime[{down}]"
+        )
 
 
-def make_fleet(n_regions: int = 2, clusters_per_region: int = 2,
-               gpus_per_cluster: int = 512,
-               with_topology: bool = True) -> Fleet:
+def make_fleet(
+    n_regions: int = 2,
+    clusters_per_region: int = 2,
+    gpus_per_cluster: int = 512,
+    with_topology: bool = True,
+) -> Fleet:
     """Build a synthetic fleet; by default it carries a realistic tiered
     ``RegionTopology`` (intra-region blob bandwidth, a fast tier between
     ring-adjacent regions, a slow tier for far pairs) so migrations are
@@ -102,8 +116,10 @@ def make_fleet(n_regions: int = 2, clusters_per_region: int = 2,
     region-blind pricing for controlled experiments."""
     regions = []
     for r in range(n_regions):
-        clusters = [Cluster(f"r{r}c{c}", f"r{r}", gpus_per_cluster)
-                    for c in range(clusters_per_region)]
+        clusters = [
+            Cluster(f"r{r}c{c}", f"r{r}", gpus_per_cluster)
+            for c in range(clusters_per_region)
+        ]
         regions.append(Region(f"r{r}", clusters))
     topology = None
     if with_topology:
@@ -111,9 +127,13 @@ def make_fleet(n_regions: int = 2, clusters_per_region: int = 2,
     return Fleet(regions, topology=topology)
 
 
-def synth_workload(n_jobs: int, fleet_gpus: int, seed: int = 0,
-                   mean_interarrival: float = 600.0,
-                   work_scale: float = 1.0) -> List[Job]:
+def synth_workload(
+    n_jobs: int,
+    fleet_gpus: int,
+    seed: int = 0,
+    mean_interarrival: float = 600.0,
+    work_scale: float = 1.0,
+) -> List[Job]:
     """Synthetic trace: mixed tiers/sizes, load ~ fleet capacity.
 
     ``work_scale`` shortens/lengthens jobs without changing the arrival
@@ -127,20 +147,38 @@ def synth_workload(n_jobs: int, fleet_gpus: int, seed: int = 0,
     tier_p = [0.2, 0.4, 0.4]
     for i in range(n_jobs):
         t += float(rng.exponential(mean_interarrival))
-        demand = int(2 ** rng.integers(3, 9))          # 8..256 GPUs
+        demand = int(2 ** rng.integers(3, 9))  # 8..256 GPUs
         hours = float(rng.uniform(0.5, 8.0)) * demand / 64 * work_scale
         tier = str(rng.choice(tiers, p=tier_p))
-        max_splice = int(2 ** rng.integers(0, 3))      # 1,2,4 (ZeRO floor)
-        jobs.append(Job(
-            id=f"j{i}", tier=tier, demand_gpus=demand,
-            gpu_hours=hours * demand, arrival=t,
-            min_gpus=max(1, demand // max_splice)))
+        max_splice = int(2 ** rng.integers(0, 3))  # 1,2,4 (ZeRO floor)
+        jobs.append(
+            Job(
+                id=f"j{i}",
+                tier=tier,
+                demand_gpus=demand,
+                gpu_hours=hours * demand,
+                arrival=t,
+                min_gpus=max(1, demand // max_splice),
+            )
+        )
     return jobs
 
 
+def _release_account(j: Job) -> None:
+    """Free a completed job's ledger slot (views only; scalar accounts
+    have nothing to release)."""
+    if isinstance(j.account, FleetSlotAccount):
+        j.account.release()
+
+
 class FleetSimulator:
-    def __init__(self, fleet: Fleet, jobs: List[Job], policy,
-                 cfg: Optional[SimConfig] = None):
+    def __init__(
+        self,
+        fleet: Fleet,
+        jobs: List[Job],
+        policy,
+        cfg: Optional[SimConfig] = None,
+    ):
         self.fleet = fleet
         self._jobs_list = list(jobs)
         self.jobs = {j.id: j for j in jobs}
@@ -150,13 +188,29 @@ class FleetSimulator:
         # region-aware pricing: a fleet that declares a topology has its
         # migrations charged by (source, destination) region pair
         if fleet.topology is not None and self.costs.topology is None:
-            self.costs = dataclasses.replace(self.costs,
-                                             topology=fleet.topology)
+            self.costs = dataclasses.replace(self.costs, topology=fleet.topology)
         # thread the charged cost model into the policy (unless the caller
         # configured one explicitly): the scheduler should weigh the same
         # downtime the simulator charges
         if hasattr(policy, "bind_costs"):
             policy.bind_costs(self.costs, self.cfg.tick_seconds)
+        # fleet-wide SLA ledger: swap each job's pristine scalar account
+        # for a ledger-backed view so SLA recording and the policy's
+        # headroom consultation run as batched array passes.  Jobs handed
+        # in with recorded history or warm caches keep their scalar
+        # account (the policy falls back per job for those).
+        if self.cfg.sla_ledger:
+            if fleet.sla is None:
+                fleet.sla = FleetSLAAccounts()
+            for j in self._jobs_list:
+                acc = j.account
+                if (
+                    isinstance(acc, GpuFractionAccount)
+                    and not acc.intervals
+                    and not acc._wcache
+                ):
+                    j.account = FleetSlotAccount(fleet.sla, j.tier, j.demand_gpus)
+        self._ledger = fleet.sla if self.cfg.sla_ledger else None
         self.now = 0.0
         self.preemptions = 0
         self.migrations = 0
@@ -192,6 +246,7 @@ class FleetSimulator:
                 j.preemptions += 1
                 self.preemptions += 1
                 j.restore_debt += self.costs.preempt_seconds(j.checkpoint_bytes)
+                j.queued_since = self.now  # fairness aging restarts here
             elif prev_g == 0 and gpus > 0:
                 # (re)start.  First admission is free; a restore pays
                 # download + rendezvous + the carried preempt debt.  A
@@ -201,16 +256,21 @@ class FleetSimulator:
                 if j.ever_ran:
                     self.restores += 1
                     src = self.fleet.region_of(j.cluster)
-                    dst = self.fleet.region_of(cluster) \
-                        if cluster is not None else src
+                    dst = self.fleet.region_of(cluster) if cluster is not None else src
                     if src is not None and dst is not None and src != dst:
                         self.restores_cross_region += 1
-                    self._charge(j, j.restore_debt +
-                                 self.costs.restore_seconds(
-                                     j.checkpoint_bytes, src, dst))
+                    self._charge(
+                        j,
+                        j.restore_debt
+                        + self.costs.restore_seconds(j.checkpoint_bytes, src, dst),
+                    )
                     j.restore_debt = 0.0
-            elif gpus > 0 and cluster is not None and j.cluster is not None \
-                    and cluster != j.cluster:
+            elif (
+                gpus > 0
+                and cluster is not None
+                and j.cluster is not None
+                and cluster != j.cluster
+            ):
                 # live migration (possibly with a simultaneous resize —
                 # still one event, one Table-5 round trip); the transfer
                 # leg is priced by the (source, destination) region pair
@@ -220,8 +280,9 @@ class FleetSimulator:
                 dst = self.fleet.region_of(cluster)
                 if src is not None and dst is not None and src != dst:
                     self.migrations_cross_region += 1
-                self._charge(j, self.costs.migrate_seconds(
-                    j.checkpoint_bytes, src, dst))
+                self._charge(
+                    j, self.costs.migrate_seconds(j.checkpoint_bytes, src, dst)
+                )
             elif gpus > 0 and gpus != prev_g:
                 # in-place transparent resize (splice swap)
                 j.resizes += 1
@@ -240,6 +301,7 @@ class FleetSimulator:
                 self.preemptions += 1
                 j.restore_debt += self.costs.preempt_seconds(j.checkpoint_bytes)
                 j.allocated = 0
+                j.queued_since = self.now
         if self.cfg.validate:
             self._check_capacity(decision)
 
@@ -254,11 +316,13 @@ class FleetSimulator:
             total += g
             if c is not None:
                 used[c] = used.get(c, 0) + g
-        assert total <= self.fleet.total(), \
-            f"fleet over-allocated: {total} > {self.fleet.total()}"
+        assert (
+            total <= self.fleet.total()
+        ), f"fleet over-allocated: {total} > {self.fleet.total()}"
         for c, u in used.items():
-            assert u <= self._cluster_caps[c], \
-                f"cluster {c} over-allocated: {u} > {self._cluster_caps[c]}"
+            assert (
+                u <= self._cluster_caps[c]
+            ), f"cluster {c} over-allocated: {u} > {self._cluster_caps[c]}"
 
     # ==================== legacy (seed) event loop ============================
     # O(jobs) Python scan per event; kept as the measured baseline for
@@ -284,6 +348,7 @@ class FleetSimulator:
                     if j.progress >= 1.0 - 1e-12:
                         j.done_at = end
                         j.allocated = 0
+                        _release_account(j)
             else:
                 self.queue_seconds += dt
         self.now = end
@@ -308,7 +373,8 @@ class FleetSimulator:
             decision = self.policy.decide(
                 self.now,
                 [j for j in self.jobs.values() if j.arrival <= self.now],
-                self.fleet)
+                self.fleet,
+            )
             self._apply(decision)
 
     # ==================== vectorized event loop ===============================
@@ -325,6 +391,22 @@ class FleetSimulator:
         self._alloc = np.zeros(n)
         self._downtime_until = np.zeros(n)
         self._done = np.zeros(n, dtype=bool)
+        # ledger plumbing: which jobs carry a view on OUR ledger (others
+        # — foreign views or history-carrying scalar accounts — record
+        # through the per-job fallback), and their lazily-filled slots
+        self._views = [j.account for j in jobs]
+        if self._ledger is not None:
+            self._is_view = np.fromiter(
+                (
+                    isinstance(a, FleetSlotAccount) and a.ledger is self._ledger
+                    for a in self._views
+                ),
+                bool,
+                n,
+            )
+        else:
+            self._is_view = np.zeros(n, dtype=bool)
+        self._slot = np.full(n, -1, np.int64)
         # precomputed arrival-sorted activation order
         self._arr_order = np.argsort(self._arrival, kind="stable")
         self._arr_sorted = self._arrival[self._arr_order]
@@ -337,26 +419,46 @@ class FleetSimulator:
         alloc = self._alloc[act]
         running = alloc > 0
         cut = np.clip(self._downtime_until[act], t0, t1)
-        eff = t1 - cut                       # productive seconds
-        dead = cut - t0                      # charged-downtime seconds
+        eff = t1 - cut  # productive seconds
+        dead = cut - t0  # charged-downtime seconds
         share = np.minimum(alloc / self._demand[act], 2.0)
-        share = np.where(alloc < self._demand[act],
-                         share * (1.0 - self._ovh[act]), share)
+        share = np.where(
+            alloc < self._demand[act], share * (1.0 - self._ovh[act]), share
+        )
         dp = np.where(running, share / self._ideal[act] * eff, 0.0)
         prog = self._progress[act] + dp
         self._progress[act] = np.minimum(prog, 1.0)
         self.busy_gpu_seconds += float(np.sum(alloc * eff * running))
         self.gpu_seconds_dead += float(np.sum(alloc * dead * running))
         self.queue_seconds += float(np.count_nonzero(~running)) * dt
-        # SLA accounts: only guaranteed tiers are ever consulted by the
-        # policy; coalesced O(1) appends keep this loop cheap
+        # SLA delivery: only guaranteed tiers are ever consulted by the
+        # policy.  Ledger-backed jobs record in two batched calls (the
+        # downtime/productive split); stragglers take the per-job path.
         jobs = self._jobs_list
-        for k in np.flatnonzero(self._guar[act]):
-            i = act[k]
-            j = jobs[i]
-            c = cut[k]
-            j.account.record(t0, c, 0)
-            j.account.record(c, t1, int(alloc[k]))
+        gsel = np.flatnonzero(self._guar[act])
+        if gsel.size:
+            vmask = self._is_view[act[gsel]]
+            vsel = gsel[vmask]
+            if vsel.size:
+                rows = act[vsel]
+                slots = self._slot[rows]
+                if (slots < 0).any():
+                    for i in rows[slots < 0]:
+                        self._slot[i] = self._views[i].ensure_slot()
+                    slots = self._slot[rows]
+                m = rows.size
+                self._ledger.record_batch(
+                    slots, np.full(m, t0), cut[vsel], np.zeros(m, np.int64)
+                )
+                self._ledger.record_batch(
+                    slots, cut[vsel], np.full(m, t1), alloc[vsel].astype(np.int64)
+                )
+            for k in gsel[~vmask]:
+                i = act[k]
+                j = jobs[i]
+                c = cut[k]
+                j.account.record(t0, c, 0)
+                j.account.record(c, t1, int(alloc[k]))
         # completions (done_at granularity = this advance's end, matching
         # the legacy loop's semantics)
         done_now = act[(prog >= 1.0 - 1e-12) & running]
@@ -367,6 +469,7 @@ class FleetSimulator:
                 jobs[i].progress = 1.0
                 jobs[i].done_at = t1
                 jobs[i].allocated = 0
+                _release_account(jobs[i])
 
     def _run_vectorized_loop(self) -> None:
         cfg = self.cfg
@@ -433,14 +536,20 @@ class FleetSimulator:
             jct[tier] = float(np.mean([j.done_at - j.arrival for j in tjobs]))
         return SimResult(
             utilization=self.busy_gpu_seconds / total_gpu_seconds,
-            sla_attainment=sla, mean_jct=jct,
-            completed=len(done), total_jobs=len(jobs),
-            preemptions=self.preemptions, migrations=self.migrations,
-            resizes=self.resizes, queue_seconds=self.queue_seconds,
-            gpu_seconds_idle=(total_gpu_seconds - self.busy_gpu_seconds
-                              - self.gpu_seconds_dead),
+            sla_attainment=sla,
+            mean_jct=jct,
+            completed=len(done),
+            total_jobs=len(jobs),
+            preemptions=self.preemptions,
+            migrations=self.migrations,
+            resizes=self.resizes,
+            queue_seconds=self.queue_seconds,
+            gpu_seconds_idle=(
+                total_gpu_seconds - self.busy_gpu_seconds - self.gpu_seconds_dead
+            ),
             restores=self.restores,
             gpu_seconds_dead=self.gpu_seconds_dead,
             downtime_by_tier={t: v for t, v in downtime.items() if v > 0},
             migrations_cross_region=self.migrations_cross_region,
-            restores_cross_region=self.restores_cross_region)
+            restores_cross_region=self.restores_cross_region,
+        )

@@ -4,7 +4,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional
 
-from repro.core.sla import GpuFractionAccount, TIERS
+from repro.core.sla import TIERS, FleetSLAAccounts, GpuFractionAccount, SLAAccount
 from repro.scheduler.costs import RegionTopology, default_checkpoint_bytes
 
 
@@ -36,10 +36,13 @@ class Region:
 class Fleet:
     """The global scheduler's world model: regions of clusters plus the
     inter-region transfer topology the cost model prices migrations
-    against (``None`` = region-blind, every pair at blob bandwidth)."""
+    against (``None`` = region-blind, every pair at blob bandwidth) and
+    the shared SLA ledger all active jobs' accounts live in (``None`` =
+    per-job scalar accounts)."""
 
     regions: List[Region]
     topology: Optional[RegionTopology] = None
+    sla: Optional[FleetSLAAccounts] = None
 
     def total(self) -> int:
         return sum(r.total() for r in self.regions)
@@ -71,35 +74,44 @@ class Job:
     ``preemptible`` are ALWAYS true in Singularity (the paper's point);
     the static baseline policy ignores them.
     """
+
     id: str
-    tier: str                     # premium | standard | basic
+    tier: str  # premium | standard | basic
     demand_gpus: int
-    gpu_hours: float              # total work in (demand_gpus x hours)
-    arrival: float                # seconds
+    gpu_hours: float  # total work in (demand_gpus x hours)
+    arrival: float  # seconds
     min_gpus: int = 1
     splice_overhead: float = 0.03  # Fig-4 measured time-slicing overhead
-    checkpoint_bytes: int = 0     # deduped snapshot size (Table 4); 0 = estimate
+    checkpoint_bytes: int = 0  # deduped snapshot size (Table 4); 0 = estimate
 
     # runtime state
     allocated: int = 0
     cluster: Optional[str] = None
-    progress: float = 0.0         # in [0, 1]
+    progress: float = 0.0  # in [0, 1]
     done_at: Optional[float] = None
     preemptions: int = 0
     migrations: int = 0
     resizes: int = 0
-    account: GpuFractionAccount = None
+    # filled by __post_init__ with a scalar account when the caller does
+    # not supply one; the simulator/executor swap in a ledger-backed
+    # FleetSlotAccount view so fleet-wide queries batch
+    account: Optional[SLAAccount] = None
+    # wall time this job last entered the queue (arrival, or the moment
+    # of its last preemption); the policy's fairness aging reads it
+    queued_since: float = -1.0
 
     # cost accounting (set by the simulator's cost model)
-    downtime_until: float = 0.0   # no progress before this wall time
+    downtime_until: float = 0.0  # no progress before this wall time
     downtime_seconds: float = 0.0  # total dead time charged so far
-    restore_debt: float = 0.0     # preempt cost carried into the next restore
-    ever_ran: bool = False        # has a checkpoint to restore from
+    restore_debt: float = 0.0  # preempt cost carried into the next restore
+    ever_ran: bool = False  # has a checkpoint to restore from
 
     def __post_init__(self):
         assert self.tier in TIERS
         if self.account is None:
             self.account = GpuFractionAccount(self.tier, self.demand_gpus)
+        if self.queued_since < 0.0:
+            self.queued_since = self.arrival
         if self.checkpoint_bytes <= 0:
             self.checkpoint_bytes = default_checkpoint_bytes(self.demand_gpus)
 
@@ -114,7 +126,7 @@ class Job:
             return 0.0
         eff = min(self.allocated / self.demand_gpus, 2.0)
         if self.allocated < self.demand_gpus:
-            eff *= (1.0 - self.splice_overhead)
+            eff *= 1.0 - self.splice_overhead
         return eff / self.ideal_seconds
 
     def remaining_seconds(self) -> float:

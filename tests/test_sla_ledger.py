@@ -1,0 +1,201 @@
+"""FleetSLAAccounts vs the scalar GpuFractionAccount oracle.
+
+The fleet ledger is the decide path's SLA source at million-job scale;
+its contract is bit-for-bit agreement (within 1e-9) with the scalar
+account under ANY interleaving of records and queries — including
+out-of-order query times, window sizes other than HOUR, coalescing
+records, zero-demand accounts, and slot release/reuse.  CI's bench-smoke
+job runs this module as part of the equivalence gate.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sla import (
+    HOUR,
+    FleetSLAAccounts,
+    FleetSlotAccount,
+    GpuFractionAccount,
+)
+
+TIER_NAMES = ["premium", "standard", "basic"]
+WINDOWS = [HOUR, 600.0, 1800.0, 7200.0, 411.7]
+
+
+def _check_close(got: float, want: float, ctx) -> None:
+    assert abs(got - want) < 1e-9, (got, want, ctx)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    seed=st.integers(0, 10**6),
+    n_jobs=st.integers(1, 8),
+    n_ops=st.integers(1, 60),
+)
+def test_ledger_matches_scalar_oracle_under_random_interleavings(seed, n_jobs, n_ops):
+    """Random record/headroom/worst_window_fraction interleavings (single
+    and fleet-batched queries, out-of-order times, non-HOUR windows) must
+    agree with a fresh scalar account per job within 1e-9."""
+    rng = np.random.Generator(np.random.Philox(seed))
+    # tiny initial capacities force the slot- and interval-growth paths
+    ledger = FleetSLAAccounts(slot_capacity=1, interval_capacity=2)
+    tiers = [str(rng.choice(TIER_NAMES)) for _ in range(n_jobs)]
+    demands = [int(rng.integers(0, 13)) for _ in range(n_jobs)]  # 0 legal
+    views = [FleetSlotAccount(ledger, tiers[i], demands[i]) for i in range(n_jobs)]
+    oracles = [GpuFractionAccount(tiers[i], demands[i]) for i in range(n_jobs)]
+    frontier = [0.0] * n_jobs  # records are append-only in time per job
+
+    def query_time() -> float:
+        return float(rng.uniform(0.0, 1.5 * max(max(frontier), 1.0) + 10.0))
+
+    for _ in range(n_ops):
+        i = int(rng.integers(0, n_jobs))
+        op = int(rng.integers(0, 5))
+        if op == 4:
+            # the simulator's write path: ONE record_batch over a random
+            # job subset (mixed coalesce/append/no-op rows in one call)
+            sel = np.flatnonzero(rng.integers(0, 2, n_jobs).astype(bool))
+            if sel.size == 0:
+                continue
+            starts, ends, allocs = [], [], []
+            for k in sel:
+                s = frontier[k]
+                if rng.integers(0, 2) == 1:
+                    s += float(rng.uniform(0.0, 900.0))
+                d = float(rng.choice([0.0, 1.0, 117.3, 1800.0]))
+                starts.append(s)
+                ends.append(s + d)
+                allocs.append(int(rng.integers(0, demands[k] + 3)))
+                frontier[k] = max(frontier[k], s + d)
+            slots = np.array([views[k].ensure_slot() for k in sel], np.int64)
+            ledger.record_batch(
+                slots, np.array(starts), np.array(ends), np.array(allocs, np.int64)
+            )
+            for pos, k in enumerate(sel):
+                oracles[k].record(starts[pos], ends[pos], allocs[pos])
+            continue
+        if op == 0:
+            # record; half the time contiguous with the previous record so
+            # the coalescing path is exercised, sometimes zero-length
+            start = frontier[i]
+            if rng.integers(0, 2) == 1:
+                start += float(rng.uniform(0.0, 900.0))
+            dur = float(rng.choice([0.0, 1.0, 117.3, 1800.0, 4000.0]))
+            alloc = int(rng.integers(0, demands[i] + 3))
+            views[i].record(start, start + dur, alloc)
+            oracles[i].record(start, start + dur, alloc)
+            frontier[i] = max(frontier[i], start + dur)
+        elif op == 1:
+            now = query_time()
+            window = float(rng.choice(WINDOWS))
+            _check_close(
+                views[i].headroom(now, window),
+                oracles[i].headroom(now, window),
+                ("headroom", i, now, window),
+            )
+        elif op == 2:
+            now = query_time()
+            window = float(rng.choice(WINDOWS))
+            _check_close(
+                views[i].worst_window_fraction(now, window),
+                oracles[i].worst_window_fraction(now, window),
+                ("worst", i, now, window),
+            )
+        else:
+            # the decide path's shape: one batched query over the fleet
+            now = query_time()
+            window = float(rng.choice(WINDOWS))
+            slots = np.array([v.slot for v in views], np.int64)
+            gfrac = np.array([o.tier.gpu_fraction for o in oracles])
+            got = ledger.headroom_all(now, slots, gfrac, window=window)
+            for k, o in enumerate(oracles):
+                _check_close(
+                    float(got[k]),
+                    o.headroom(now, window),
+                    ("batched", k, now, window),
+                )
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_unfinalized_frontier_rule_matches_scalar(seed):
+    """A query issued past the recorded frontier must not poison the
+    window cache: later records re-evaluate those windows, exactly like
+    the scalar account's finalization rule."""
+    rng = np.random.Generator(np.random.Philox(seed))
+    ledger = FleetSLAAccounts(slot_capacity=1, interval_capacity=2)
+    view = FleetSlotAccount(ledger, "standard", 8)
+    oracle = GpuFractionAccount("standard", 8)
+    for acc in (view, oracle):
+        acc.record(0.0, 1800.0, 8)
+    # query far past the frontier: windows beyond 1800s are not final
+    early_now = float(rng.uniform(3600.0, 4 * HOUR))
+    _check_close(
+        view.worst_window_fraction(early_now),
+        oracle.worst_window_fraction(early_now),
+        "past-frontier query",
+    )
+    # now the interval actually gets recorded with full allocation
+    for acc in (view, oracle):
+        acc.record(1800.0, early_now, 8)
+    for now in (early_now, early_now + HOUR / 3, early_now * 2):
+        _check_close(
+            view.worst_window_fraction(now),
+            oracle.worst_window_fraction(now),
+            ("post-record query", now),
+        )
+        _check_close(
+            view.headroom(now), oracle.headroom(now), ("headroom", now)
+        )
+
+
+def test_empty_and_unregistered_accounts_answer_like_scalar():
+    ledger = FleetSLAAccounts()
+    view = FleetSlotAccount(ledger, "premium", 16)
+    oracle = GpuFractionAccount("premium", 16)
+    assert view.slot == -1  # lazy: no slot until a real record lands
+    for now in (0.0, 1800.0, 7200.0):
+        _check_close(
+            view.worst_window_fraction(now),
+            oracle.worst_window_fraction(now),
+            now,
+        )
+        _check_close(view.headroom(now), oracle.headroom(now), now)
+        assert view.delivered_seconds(0.0, now) == 0.0
+    # zero-length records stay no-ops and never register a slot
+    view.record(10.0, 10.0, 8)
+    assert view.slot == -1
+    # batched query over unregistered slots answers 1.0 - gfrac
+    got = ledger.headroom_all(
+        1800.0, np.array([-1, -1], np.int64), np.array([0.95, 0.0])
+    )
+    assert abs(got[0] - 0.05) < 1e-12
+    assert abs(got[1] - 1.0) < 1e-12
+
+
+def test_slot_release_and_reuse():
+    ledger = FleetSLAAccounts(slot_capacity=1, interval_capacity=2)
+    a = FleetSlotAccount(ledger, "standard", 8)
+    a.record(0.0, 1800.0, 4)
+    slot_a = a.slot
+    assert ledger.slots_in_use == 1
+    assert a.worst_window_fraction(1800.0) < 1.0
+    a.release()
+    assert ledger.slots_in_use == 0
+    # the freed row is reused and starts fresh
+    b = FleetSlotAccount(ledger, "premium", 2)
+    b.record(0.0, 900.0, 2)
+    assert b.slot == slot_a
+    oracle = GpuFractionAccount("premium", 2)
+    oracle.record(0.0, 900.0, 2)
+    _check_close(
+        b.worst_window_fraction(900.0),
+        oracle.worst_window_fraction(900.0),
+        "reused slot",
+    )
+    # a released view refuses further use
+    try:
+        a.headroom(3600.0)
+    except RuntimeError:
+        pass
+    else:
+        raise AssertionError("released account should raise on query")
