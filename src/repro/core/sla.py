@@ -168,11 +168,33 @@ class FleetSLAAccounts:
     ``release`` returns a completed job's row to a free list for reuse, so
     live memory tracks the number of *concurrently* active jobs rather
     than the length of the trace.
+
+    **Compaction.**  A months-long churny job appends intervals forever;
+    without intervention the shared interval axis doubles without bound.
+    Once the axis reaches ``compact_after`` columns, a full slot first
+    tries ``_compact_slot``: every interval finalized for all cached
+    windows AND older than ``keep_horizon_seconds`` behind the slot's
+    recorded frontier collapses into ONE summary interval whose weight
+    reproduces the exact delivered-seconds prefix (the absolute ``cum``
+    values of the kept suffix are untouched, so deliveries and window
+    fractions that only touch the suffix are bit-identical; queries
+    *inside* the compacted prefix see its average rate).  Only when
+    compaction frees nothing does the axis actually grow — so the axis is
+    bounded by churn within the keep horizon, not by job lifetime.
+    ``compact_after=None`` disables.
     """
 
-    def __init__(self, slot_capacity: int = 64, interval_capacity: int = 4):
+    def __init__(
+        self,
+        slot_capacity: int = 64,
+        interval_capacity: int = 4,
+        compact_after: int = 512,
+        keep_horizon_seconds: float = 24 * HOUR,
+    ):
         self._cap = max(1, int(slot_capacity))
         self._iv_cap = max(2, int(interval_capacity))
+        self._compact_after = compact_after
+        self._keep_horizon = float(keep_horizon_seconds)
         self._n = 0  # high-water slot mark
         self._free: List[int] = []
         self._demand = np.zeros(self._cap, np.int64)
@@ -256,6 +278,81 @@ class FleetSLAAccounts:
         self._cum = self._grown(self._cum, (self._cap, cols), 0.0)
         self._iv_cap = cols
 
+    # -------------------------------------------------------- compaction
+    def _compact_cutoff(self, slot: int) -> float:
+        """Latest time before which this slot's intervals are summary-
+        safe: behind every cached window's finalized frontier AND at
+        least the keep horizon behind the recorded frontier (so trailing
+        windows and moderately out-of-order queries stay exact)."""
+        cnt = int(self._count[slot])
+        cutoff = float(self._end[slot, cnt - 1]) - self._keep_horizon
+        for _, wstart in self._wcache.values():
+            ws = float(wstart[slot])
+            if not np.isnan(ws):
+                cutoff = min(cutoff, ws)
+        return cutoff
+
+    def _compact_slot(self, slot: int) -> int:
+        """Collapse the slot's finalized interval prefix into one summary
+        interval; returns the number of rows freed.  The summary weight
+        reproduces the exact delivered-seconds total over the prefix, so
+        every query outside it is unchanged (to float rounding); queries
+        inside it see the prefix's average delivery rate.
+        """
+        cnt = int(self._count[slot])
+        if cnt < 3:
+            return 0
+        cutoff = self._compact_cutoff(slot)
+        # rows fully behind the cutoff (interval ends are strictly
+        # increasing: records are append-only in time)
+        k = int(np.searchsorted(self._end[slot, :cnt], cutoff, side="right"))
+        if k < 2:
+            return 0
+        s0 = float(self._start[slot, 0])
+        last_s = float(self._start[slot, k - 1])
+        last_e = float(self._end[slot, k - 1])
+        delivered = float(
+            self._cum[slot, k - 1] + (last_e - last_s) * self._wgt[slot, k - 1]
+        )
+        span = last_e - s0
+        m = cnt - k  # suffix rows kept verbatim (absolute cum preserved)
+        self._start[slot, 1 : 1 + m] = self._start[slot, k:cnt]
+        self._end[slot, 1 : 1 + m] = self._end[slot, k:cnt]
+        self._alloc[slot, 1 : 1 + m] = self._alloc[slot, k:cnt]
+        self._wgt[slot, 1 : 1 + m] = self._wgt[slot, k:cnt]
+        self._cum[slot, 1 : 1 + m] = self._cum[slot, k:cnt]
+        self._start[slot, 0] = s0
+        self._end[slot, 0] = last_e
+        self._alloc[slot, 0] = -1  # sentinel: a summary row never coalesces
+        self._wgt[slot, 0] = delivered / span if span > 0 else 0.0
+        self._cum[slot, 0] = 0.0
+        self._start[slot, 1 + m : cnt] = np.inf
+        self._end[slot, 1 + m : cnt] = 0.0
+        self._alloc[slot, 1 + m : cnt] = 0
+        self._wgt[slot, 1 + m : cnt] = 0.0
+        self._cum[slot, 1 + m : cnt] = 0.0
+        self._count[slot] = m + 1
+        return k - 1
+
+    def _maybe_compact(self, slot: int) -> bool:
+        """Auto-compaction hook for a full slot on the record path: only
+        once the axis has reached ``compact_after`` columns, and only if
+        it actually frees rows (otherwise the caller grows the axis)."""
+        if self._compact_after is None or self._iv_cap < self._compact_after:
+            return False
+        return self._compact_slot(slot) > 0
+
+    def compact(self) -> int:
+        """Compact every live slot now; returns total rows freed.  The
+        auto path (``compact_after``) makes explicit calls unnecessary,
+        but long-lived ledgers can invoke this at quiet moments."""
+        freed = 0
+        free = set(self._free)
+        for slot in range(self._n):
+            if slot not in free and self._count[slot] > 0:
+                freed += self._compact_slot(slot)
+        return freed
+
     # ----------------------------------------------------------- records
     def record_batch(
         self,
@@ -284,6 +381,12 @@ class FleetSLAAccounts:
             start = start[live]
             end = end[live]
             allocated = allocated[live]
+        # compact full slots before growing the shared axis (a summary
+        # merge never touches a slot's LAST row, so the coalescing /
+        # prefix-sum logic below is unaffected)
+        if self._compact_after is not None and self._iv_cap >= self._compact_after:
+            for s in slots[self._count[slots] >= self._iv_cap]:
+                self._compact_slot(int(s))
         cnt = self._count[slots]
         last = np.maximum(cnt - 1, 0)
         has = cnt > 0
@@ -341,7 +444,10 @@ class FleetSLAAccounts:
                     self._end[slot, last] = end
                 return
         if cnt >= self._iv_cap:
-            self._grow_intervals()
+            if self._maybe_compact(slot):
+                cnt = int(self._count[slot])
+            else:
+                self._grow_intervals()
         if cnt > 0:
             prev = cnt - 1
             self._cum[slot, cnt] = (

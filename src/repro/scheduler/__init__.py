@@ -6,6 +6,12 @@ from repro.scheduler.costs import (
 )
 from repro.scheduler.executor import FleetExecutor, ManagedJob
 from repro.scheduler.policy import ElasticPolicy, StaticGangPolicy
+from repro.scheduler.reliability import (
+    CheckpointCadence,
+    FailureEvent,
+    FailureModel,
+    FailureTrace,
+)
 from repro.scheduler.simulator import FleetSimulator, SimConfig
 from repro.scheduler.types import Cluster, Fleet, Job, Region
 
@@ -18,6 +24,10 @@ __all__ = [
     "ManagedJob",
     "ElasticPolicy",
     "StaticGangPolicy",
+    "CheckpointCadence",
+    "FailureEvent",
+    "FailureModel",
+    "FailureTrace",
     "FleetSimulator",
     "SimConfig",
     "Cluster",

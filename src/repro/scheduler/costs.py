@@ -213,6 +213,13 @@ class CostModel:
         return self.scale * (self.barrier_seconds()
                              + self.rendezvous_seconds)
 
+    def snapshot_seconds(self, checkpoint_bytes):
+        """Online checkpoint while the job keeps its allocation: quiesce
+        + dump + upload — the save side of a preemption, charged as
+        downtime.  This is the Young–Daly ``delta`` the checkpoint
+        cadence weighs against the domain failure rate."""
+        return self.preempt_seconds(checkpoint_bytes)
+
     # --------------------------------------------------------- constructors
     @classmethod
     def free(cls) -> "CostModel":
@@ -244,14 +251,55 @@ class CostModel:
         barrier as mean per-minibatch wall time, the rendezvous as the
         mean measured restore.  Reports are duck-typed so analysis
         tooling can calibrate from serialized rows as well.
+
+        When reports carry ``src_region``/``dst_region``, the fit is
+        region-aware: the base blob bandwidth comes from intra-region
+        (or region-blind) reports, and each measured cross-region pair
+        gets its own fitted ``RegionLink`` in a synthesized
+        ``RegionTopology`` — so the scheduler charges the slower WAN
+        tiers it actually observed.  A ``topology`` passed explicitly is
+        never overwritten by the fit.
         """
         reports = list(reports)
         if not reports:
             raise ValueError("from_reports needs at least one MigrationReport")
+
+        def _pair(r) -> Optional[Tuple[str, str]]:
+            src = getattr(r, "src_region", None)
+            dst = getattr(r, "dst_region", None)
+            if src is None or dst is None or src == dst:
+                return None
+            return (src, dst)
+
+        def _blob_bw(rs) -> float:
+            nbytes = float(sum(r.device_stored_bytes + r.host_stored_bytes
+                               for r in rs))
+            secs = float(sum(r.upload_seconds + r.download_seconds
+                             for r in rs))
+            return 2.0 * nbytes / max(secs, 1e-9)
+
+        intra = [r for r in reports if _pair(r) is None]
+        cross: Dict[Tuple[str, str], list] = {}
+        for r in reports:
+            pair = _pair(r)
+            if pair is not None:
+                cross.setdefault(pair, []).append(r)
+        # base (intra-region) bandwidth from intra reports when any exist;
+        # a purely cross-region report set falls back to the full pool
+        base = intra if intra else reports
+        base_bw = _blob_bw(base)
+        if topology is None and cross:
+            links = {
+                pair: RegionLink(_blob_bw(rs)) for pair, rs in cross.items()
+            }
+            topology = RegionTopology(
+                intra_bandwidth=base_bw,
+                cross_bandwidth=min(lk.bandwidth for lk in links.values()),
+                cross_latency_seconds=0.0,
+                links=links)
+
         total_bytes = float(sum(r.device_stored_bytes + r.host_stored_bytes
                                 for r in reports))
-        blob_s = float(sum(r.upload_seconds + r.download_seconds
-                           for r in reports))
         dump_s = float(sum(r.dump_seconds for r in reports))
         n = len(reports)
         mb = max(1, round(sum(r.barrier_minibatches for r in reports) / n))
@@ -259,7 +307,7 @@ class CostModel:
                          for r in reports) / n
         rendezvous = sum(r.restore_seconds for r in reports) / n
         return cls(
-            blob_bandwidth=2.0 * total_bytes / max(blob_s, 1e-9),
+            blob_bandwidth=base_bw,
             host_device_bandwidth=total_bytes / max(dump_s, 1e-9),
             barrier_minibatches=mb,
             minibatch_seconds=mb_seconds,

@@ -163,8 +163,23 @@ class FleetExecutor:
                 shadow.queued_since = self.clock
                 self.log.append({"event": "preempt", "job": jid})
             elif target > 0 and job.allocated == 0 and job.runtime is None:
+                if jid not in self.store.manifests:
+                    # failed before any checkpoint existed: fresh restart
+                    job.runtime = ElasticRuntime(
+                        job._cfg, job._tcfg, job.world_size, target, job._gb, job._sl
+                    )
+                    job.steps_done = 0
+                    self._shadows[jid].failed_at = None
+                    self.log.append({"event": "restart", "job": jid, "at_step": 0})
+                    job.allocated = target
+                    shadow = self._shadows[jid]
+                    shadow.allocated = target
+                    shadow.ever_ran = True
+                    shadow.cluster = "local"
+                    continue
                 # REAL re-admission: restore from the deduped store
                 self._shadows[jid].restore_debt = 0.0
+                self._shadows[jid].failed_at = None
                 device, host, step = self.store.restore(jid)
                 job.runtime = ElasticRuntime.from_snapshot(
                     job._cfg,
@@ -192,6 +207,43 @@ class FleetExecutor:
             if target > 0:
                 shadow.ever_ran = True
                 shadow.cluster = "local"
+
+    # ------------------------------------------------------------ faults
+    def inject_failure(self, jid: str) -> Dict:
+        """Unplanned hardware failure under the REAL mechanisms: the
+        runtime is dropped with NO graceful checkpoint, so the job loses
+        every step since its last durable snapshot in the store and
+        restarts from there (or from step 0 if it never checkpointed) at
+        the next admission — the paper's reliability claim (§1, §6):
+        a failure is just a preemption minus the barrier.
+        """
+        job = self.jobs[jid]
+        assert not job.done, "cannot fail a completed job"
+        step_now = job.steps_done
+        if job.runtime is not None:
+            step_now = int(job.runtime.state["step"])
+        if jid in self.store.manifests:
+            snap_step = int(self.store.manifests[jid][-1]["step"])
+        else:
+            snap_step = 0  # never checkpointed: restart from scratch
+        job.runtime = None  # the hardware is gone — no quiesce, no dump
+        job.allocated = 0
+        job.steps_done = snap_step
+        shadow = self._shadows[jid]
+        shadow.allocated = 0
+        shadow.failures += 1
+        shadow.failed_at = self.clock
+        shadow.queued_since = self.clock  # fairness aging restarts here
+        shadow.restore_debt = 0.0  # no graceful preempt was paid
+        event = {
+            "event": "failure",
+            "job": jid,
+            "at_step": step_now,
+            "rollback_to": snap_step,
+            "lost_steps": step_now - snap_step,
+        }
+        self.log.append(event)
+        return event
 
     # ------------------------------------------------------------ run
     def tick(self, steps: int = 1) -> None:

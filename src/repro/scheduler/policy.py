@@ -30,12 +30,18 @@ real downtime instead of treating them as free:
   its current region when any same-region cluster fits, because the cost
   model prices cross-region migrations at the slower inter-region blob
   tier.
+- *Reliability-aware placement* — only HEALTHY capacity is allocatable
+  (failed-out domains await repair), draining domains are avoided when a
+  healthy cluster fits, and a running job evacuates a draining cluster
+  proactively when one migration costs less than the work a failure
+  would destroy (unsnapshotted progress plus the forced restore).
 
 **Fair under permanent overload.**  Victim ranking alone lets a queued
 guaranteed job starve forever behind running peers that are expensive to
 stop.  Admission-order *fairness aging* fixes that: a guaranteed job
 queued longer than ``aging_threshold_intervals`` scheduling intervals
-accrues a bonus of ``aging_rate`` cost-seconds per excess second queued,
+accrues a bonus of ``aging_rate`` cost-seconds per excess second queued
+(a float, or a per-tier mapping so premium ages faster than standard),
 and competes in the running-job class with that bonus as its score — once
 the bonus exceeds a running peer's preempt+restore downtime, the aged job
 is admitted ahead of it.  When the queue drains (or within the
@@ -59,7 +65,7 @@ that motivates the paper (§1: utilization/idling).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Mapping, Optional, Tuple, Union
 
 import numpy as np
 
@@ -92,7 +98,8 @@ class StaticGangPolicy:
     name = "static"
 
     def decide(self, now: float, jobs: List[Job], fleet: Fleet) -> Decision:
-        free = {c.id: c.total_gpus for c in fleet.clusters()}
+        # healthy capacity only: failed-out GPUs are not allocatable
+        free = {c.id: c.capacity() for c in fleet.clusters()}
         for j in jobs:
             if j.done_at is None and j.allocated > 0:
                 free[j.cluster] -= j.allocated
@@ -188,7 +195,7 @@ class ElasticPolicy:
         cost_model: Optional[CostModel] = None,
         interval_hint: Optional[float] = None,
         vectorized: bool = True,
-        aging_rate: float = 1.0,
+        aging_rate: Union[float, Mapping[str, float]] = 1.0,
         aging_threshold_intervals: float = 12.0,
     ):
         self.expand_factor = expand_factor
@@ -199,8 +206,17 @@ class ElasticPolicy:
         self.vectorized = vectorized
         # fairness aging: a guaranteed job queued longer than
         # aging_threshold_intervals ticks accrues aging_rate cost-seconds
-        # of admission credit per excess second; 0 disables aging
+        # of admission credit per excess second; 0 disables aging.  A
+        # mapping gives per-tier rates (premium can age faster than
+        # standard); tiers absent from the mapping do not age.
         self.aging_rate = aging_rate
+        if isinstance(aging_rate, Mapping):
+            self._aging_by_tier = {t: float(aging_rate.get(t, 0.0)) for t in TIERS}
+        else:
+            self._aging_by_tier = {t: float(aging_rate) for t in TIERS}
+        self._aging_vec = np.array(
+            [self._aging_by_tier[t] for t in TIERS], np.float64
+        )
         self.aging_threshold_intervals = aging_threshold_intervals
         self._bound_cost = False
         self._bound_interval = False
@@ -359,17 +375,15 @@ class ElasticPolicy:
         idx = np.arange(n)
         # fairness aging: a guaranteed job queued past the threshold joins
         # the running-job class, scored by its accrued bonus against the
-        # running peers' preempt+restore downtime
+        # running peers' preempt+restore downtime; rates are per tier
         wait = now - qsince
         threshold = self.aging_threshold_intervals * interval
-        if self.aging_rate > 0.0:
-            aged = (~running) & guar & (wait > threshold)
-        else:
-            aged = np.zeros(n, dtype=bool)
+        rate = self._aging_vec[tcode]
+        aged = (~running) & guar & (wait > threshold) & (rate > 0.0)
         score = np.where(
             running,
             vcost,
-            np.where(aged, self.aging_rate * (wait - threshold), 0.0),
+            np.where(aged, rate * (wait - threshold), 0.0),
         )
         waiting = (~(running | aged)).astype(np.int64)
         # admission order: tier first; within a tier the running jobs and
@@ -377,7 +391,8 @@ class ElasticPolicy:
         # how expensive they are to stop (or how starved they are), then
         # FIFO (lexsort: last key is primary)
         order_a = np.lexsort((idx, arrival, -score, waiting, -prio))
-        total = fleet.total()
+        # failed-out domains await repair: only healthy capacity is real
+        total = fleet.capacity()
         galloc = np.zeros(n, dtype=np.int64)
 
         # 1. guaranteed tier demands, all-or-nothing per job: under
@@ -479,15 +494,31 @@ class ElasticPolicy:
         jcl = np.fromiter((cid_index.get(j.cluster, -1) for j in active), np.int64, n)
         has_cluster = np.fromiter((j.cluster is not None for j in active), bool, n)
         jreg = np.where(jcl >= 0, creg[np.maximum(jcl, 0)], -1)
-        free = np.fromiter((c.total_gpus for c in clusters), np.int64, len(clusters))
+        free = np.fromiter((c.capacity() for c in clusters), np.int64, len(clusters))
+        drain = np.fromiter((c.draining for c in clusters), bool, len(clusters))
         idx = np.arange(n)
         # guaranteed tiers and large allocations place first so basic
         # absorbs fragmentation
         order_p = np.lexsort((idx, -galloc, -prio))
         placed = np.full(n, -1, dtype=np.int64)
 
+        # proactive migration off draining domains: a running job on a
+        # cluster in its drain-warning window loses its stay-put right
+        # when moving now costs less downtime than the work a failure
+        # would destroy (unsnapshotted progress + the restore it forces)
+        no_stay = np.zeros(n, dtype=bool)
+        any_drain = bool(drain.any())
+        if any_drain:
+            on_draining = (
+                (jcl >= 0) & running & (galloc > 0) & drain[np.maximum(jcl, 0)]
+            )
+            for i in np.flatnonzero(on_draining):
+                no_stay[i] = self._proactive_move(active[i])
+
         # keep existing placement when it still fits (no gratuitous moves)
-        stay = order_p[(galloc[order_p] > 0) & (jcl[order_p] >= 0)]
+        stay = order_p[
+            (galloc[order_p] > 0) & (jcl[order_p] >= 0) & ~no_stay[order_p]
+        ]
         for k in range(len(clusters)):
             sel = stay[jcl[stay] == k]
             if sel.size:
@@ -506,12 +537,16 @@ class ElasticPolicy:
                 continue
             fits = free >= g
             if fits.any():
-                # defrag: most-free cluster, but a running job prefers to
-                # stay in-region (cross-region moves pay the slower blob
-                # tier in the cost model)
+                # defrag: most-free cluster, avoiding draining domains
+                # when a healthy one fits; a running job prefers to stay
+                # in-region (cross-region moves pay the slower blob tier)
                 pool = fits
+                if any_drain:
+                    nd = fits & ~drain
+                    if nd.any():
+                        pool = nd
                 if running[i] and jreg[i] >= 0:
-                    same = fits & (creg == jreg[i])
+                    same = pool & (creg == jreg[i])
                     if same.any():
                         pool = same
                 k = int(np.argmax(np.where(pool, free, -1)))
@@ -519,9 +554,15 @@ class ElasticPolicy:
                 free[k] -= g
             else:
                 # cannot fit contiguously anywhere -> shrink to the
-                # biggest hole, but never below the ZeRO splice floor
-                # (§5.4): below that the job is preempted
-                k = int(np.argmax(free))
+                # biggest hole (preferring healthy clusters), but never
+                # below the ZeRO splice floor (§5.4): below that the job
+                # is preempted
+                if any_drain:
+                    k = int(np.argmax(np.where(~drain, free, -1)))
+                    if drain.all() or free[k] < min_g[i]:
+                        k = int(np.argmax(free))
+                else:
+                    k = int(np.argmax(free))
                 hole = int(free[k])
                 if hole < min_g[i]:
                     galloc[i] = 0
@@ -535,6 +576,21 @@ class ElasticPolicy:
                 migrate[i] = True
         return galloc, placed, preempt, migrate
 
+    def _proactive_move(self, j: Job) -> bool:
+        """Should a running job evacuate its draining cluster now?
+
+        Moving costs one migration's downtime (intra price as the lower
+        bound — the destination is only chosen afterwards).  Staying
+        risks the domain's deadline: the unsnapshotted progress is lost
+        and the job pays a restore anyway.  Evacuate when the move is
+        cheaper than the work it saves."""
+        lost = max(0.0, j.progress - j.snap_progress) * j.ideal_seconds
+        if self.cost_model is None:
+            return lost > 0.0
+        cb = j.checkpoint_bytes
+        at_risk = lost + self.cost_model.restore_seconds(cb)
+        return self.cost_model.migrate_seconds(cb) < at_risk
+
     # ================= scalar reference oracle ===========================
     def _decide_reference(
         self, now: float, active: List[Job], fleet: Fleet
@@ -544,7 +600,7 @@ class ElasticPolicy:
         the ground truth the numpy passes are checked against."""
         n = len(active)
         interval = self._interval()
-        total = fleet.total()
+        total = fleet.capacity()
         need = [self._required(now, j) for j in active]
         head = [
             active[i].account.headroom(now)
@@ -556,11 +612,12 @@ class ElasticPolicy:
         restart = [self._restart_cost(j) for j in active]
         running = [j.allocated > 0 for j in active]
 
-        # fairness aging, same formula as the vectorized path
+        # fairness aging, same per-tier formula as the vectorized path
         threshold = self.aging_threshold_intervals * interval
         wait = [now - j.queued_since for j in active]
+        rate = [self._aging_by_tier[j.tier] for j in active]
         aged = [
-            self.aging_rate > 0.0
+            rate[i] > 0.0
             and not running[i]
             and TIERS[active[i].tier].gpu_fraction > 0
             and wait[i] > threshold
@@ -569,7 +626,7 @@ class ElasticPolicy:
         score = [
             vcost[i]
             if running[i]
-            else (self.aging_rate * (wait[i] - threshold) if aged[i] else 0.0)
+            else (rate[i] * (wait[i] - threshold) if aged[i] else 0.0)
             for i in range(n)
         ]
 
@@ -648,7 +705,8 @@ class ElasticPolicy:
 
         # 5. placement
         clusters = fleet.clusters()
-        free = {c.id: c.total_gpus for c in clusters}
+        free = {c.id: c.capacity() for c in clusters}
+        cdrain = {c.id: c.draining for c in clusters}
         cluster_region = {c.id: fleet.region_of(c.id) for c in clusters}
         order_ids = {c.id: k for k, c in enumerate(clusters)}
         order_p = sorted(
@@ -663,6 +721,10 @@ class ElasticPolicy:
         for i in order_p:
             j = active[i]
             if galloc[i] > 0 and j.cluster in free and free[j.cluster] >= galloc[i]:
+                # a running job on a draining cluster evacuates instead of
+                # staying put when the move saves more work than it costs
+                if running[i] and cdrain[j.cluster] and self._proactive_move(j):
+                    continue
                 placements[i] = j.cluster
                 free[j.cluster] -= galloc[i]
         migrations = set()
@@ -673,6 +735,9 @@ class ElasticPolicy:
                 continue
             fitting = [c for c in free if free[c] >= g]
             if fitting:
+                healthy = [c for c in fitting if not cdrain[c]]
+                if healthy:
+                    fitting = healthy
                 region = cluster_region.get(j.cluster)
                 if running[i] and region is not None:
                     same = [c for c in fitting if cluster_region[c] == region]
@@ -680,7 +745,14 @@ class ElasticPolicy:
                         fitting = same
                 cid = min(fitting, key=lambda c: (-free[c], order_ids[c]))
             else:
-                cid = min(free, key=lambda c: (-free[c], order_ids[c]))
+                healthy = [c for c in free if not cdrain[c]]
+                cid = (
+                    min(healthy, key=lambda c: (-free[c], order_ids[c]))
+                    if healthy
+                    else None
+                )
+                if cid is None or free[cid] < j.min_gpus:
+                    cid = min(free, key=lambda c: (-free[c], order_ids[c]))
                 hole = free[cid]
                 if hole < j.min_gpus:
                     galloc[i] = 0

@@ -18,6 +18,17 @@ Two faithfulness properties the seed simulator lacked:
    into exactly one of {preempt, restore, migrate, resize} and asserts
    per-cluster capacity conservation after every decision.
 
+3. **Unplanned failures are just preemptions** (§1, §6).  With
+   ``SimConfig(failures=...)`` a ``FailureTrace`` (or a sampled
+   ``FailureModel``) kills domain capacity until repair and
+   force-preempts every job intersecting the failed span, rolling its
+   progress back to the last durable snapshot — graceful checkpoints
+   from preempt/migrate events, plus periodic Young–Daly snapshots when
+   a ``CheckpointCadence`` is configured.  ``SimResult`` reports
+   ``goodput_fraction``, ``lost_work_gpu_seconds``, ``restarts_by_cause``
+   and per-tier ETTR.  Both event loops share the reliability machinery;
+   the failure-free vectorized hot path is untouched.
+
 The default event loop is vectorized: job progress is advanced with
 numpy over an arrival-sorted active window, and SLA delivery is recorded
 into the fleet-wide ``FleetSLAAccounts`` ledger in two batched calls per
@@ -31,13 +42,15 @@ comparisons (``benchmarks/sched_scale.py``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import heapq
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.core.sla import TIERS, FleetSLAAccounts, FleetSlotAccount, GpuFractionAccount
 from repro.scheduler.costs import CostModel, RegionTopology
 from repro.scheduler.policy import Decision
+from repro.scheduler.reliability import CheckpointCadence, FailureModel, FailureTrace
 from repro.scheduler.types import Cluster, Fleet, Job, Region
 
 
@@ -58,6 +71,12 @@ class SimConfig:
     # False = keep per-job scalar GpuFractionAccounts (the PR 2 baseline)
     # instead of the batched FleetSLAAccounts ledger
     sla_ledger: bool = True
+    # reliability: a replayable FailureTrace (or a FailureModel, sampled
+    # over this fleet/horizon at construction) injects unplanned failures;
+    # a CheckpointCadence adds periodic snapshots so a failure loses only
+    # the work since the last one (None = checkpoint-on-preempt-only)
+    failures: Optional[Union[FailureTrace, FailureModel]] = None
+    cadence: Optional[CheckpointCadence] = None
 
     def costs(self) -> CostModel:
         if self.cost_model is not None:
@@ -87,13 +106,31 @@ class SimResult:
     downtime_by_tier: Dict[str, float] = dataclasses.field(default_factory=dict)
     migrations_cross_region: int = 0  # subset of migrations that moved region
     restores_cross_region: int = 0  # subset of restores that moved region
+    # reliability accounting (all zero / empty without injected failures)
+    failure_events: int = 0  # domain failures applied (per affected cluster)
+    job_failures: int = 0  # jobs killed by a failure (forced preemptions)
+    snapshots: int = 0  # cadence-driven periodic snapshots taken
+    lost_work_gpu_seconds: float = 0.0  # progress destroyed by failures
+    # of all GPU-seconds consumed (productive + charged-dead), the
+    # fraction that produced *retained* progress: failures claw back the
+    # work since the last snapshot, snapshot/restore overheads are dead
+    goodput_fraction: float = 1.0
+    # per-tier realized goodput: mean over a tier's arrived jobs of
+    # RETAINED progress (failures claw back unsnapshotted work) relative
+    # to a dedicated machine's pace — the reliability analogue of the
+    # GPU-fraction SLA, ordered premium >= standard >= basic by admission
+    # preference even under failure storms
+    goodput_by_tier: Dict[str, float] = dataclasses.field(default_factory=dict)
+    restarts_by_cause: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # mean seconds from a job's failure to its restart (per tier)
+    ettr_by_tier: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def summary(self) -> str:
         sla = ", ".join(f"{t}={v:.3f}" for t, v in self.sla_attainment.items())
         down = ", ".join(
             f"{t}={v / 3600:.1f}h" for t, v in self.downtime_by_tier.items()
         )
-        return (
+        out = (
             f"util={self.utilization:.3f} sla[{sla}] "
             f"done={self.completed}/{self.total_jobs} "
             f"preempt={self.preemptions} migr={self.migrations} "
@@ -101,6 +138,14 @@ class SimResult:
             f"resize={self.resizes} restore={self.restores} "
             f"downtime[{down}]"
         )
+        if self.failure_events or self.snapshots:
+            out += (
+                f" failures={self.failure_events} killed={self.job_failures} "
+                f"snapshots={self.snapshots} "
+                f"lost={self.lost_work_gpu_seconds / 3600:.1f} gpu-h "
+                f"goodput={self.goodput_fraction:.3f}"
+            )
+        return out
 
 
 def make_fleet(
@@ -108,16 +153,21 @@ def make_fleet(
     clusters_per_region: int = 2,
     gpus_per_cluster: int = 512,
     with_topology: bool = True,
+    gpus_per_node: int = 8,
 ) -> Fleet:
     """Build a synthetic fleet; by default it carries a realistic tiered
     ``RegionTopology`` (intra-region blob bandwidth, a fast tier between
     ring-adjacent regions, a slow tier for far pairs) so migrations are
     priced by region pair.  ``with_topology=False`` keeps the seed's
-    region-blind pricing for controlled experiments."""
+    region-blind pricing for controlled experiments.  Clusters carry node
+    granularity (``gpus_per_node``) so device/node/cluster/region failure
+    domains are real."""
     regions = []
     for r in range(n_regions):
         clusters = [
-            Cluster(f"r{r}c{c}", f"r{r}", gpus_per_cluster)
+            Cluster(
+                f"r{r}c{c}", f"r{r}", gpus_per_cluster, gpus_per_node=gpus_per_node
+            )
             for c in range(clusters_per_region)
         ]
         regions.append(Region(f"r{r}", clusters))
@@ -222,7 +272,64 @@ class FleetSimulator:
         self.gpu_seconds_dead = 0.0
         self.queue_seconds = 0.0
         self.events_processed = 0
-        self._cluster_caps = {c.id: c.total_gpus for c in fleet.clusters()}
+        self._lost_by_tier = {t: 0.0 for t in TIERS}
+        self._cluster_by_id = {c.id: c for c in fleet.clusters()}
+        self._index = {j.id: i for i, j in enumerate(self._jobs_list)}
+        # ---- reliability: failure schedule + checkpoint cadence ----------
+        self.failure_events = 0
+        self.job_failures = 0
+        self.snapshots = 0
+        self.lost_work_gpu_seconds = 0.0
+        self.restarts_by_cause: Dict[str, int] = {}
+        self._ettr_sum = {t: 0.0 for t in TIERS}
+        self._ettr_n = {t: 0 for t in TIERS}
+        self.failure_trace: Optional[FailureTrace] = None
+        # per-cluster (time, gpus, repair) failure entries + drain warnings,
+        # consumed by advancing pointers; repairs are a (time, cid, g) heap
+        self._fails: List[Tuple[float, str, int, float]] = []
+        self._warns: List[Tuple[float, str, float]] = []
+        self._fail_ptr = 0
+        self._warn_ptr = 0
+        self._repairs: List[Tuple[float, str, int]] = []
+        # outstanding failure amounts per cluster (unclamped sum): dead
+        # capacity is min(total, outstanding), so overlapping failures
+        # cannot resurrect capacity when the shorter one repairs first
+        self._outstanding: Dict[str, int] = {}
+        if self.cfg.failures is not None:
+            trace = self.cfg.failures
+            if isinstance(trace, FailureModel):
+                trace = trace.sample(fleet, self.cfg.horizon_seconds)
+            self.failure_trace = trace
+            by_region = {r.id: [c.id for c in r.clusters] for r in fleet.regions}
+            for e in trace.events:
+                if e.level != "region":
+                    cids = [e.domain]
+                else:
+                    cids = by_region.get(e.domain, [])
+                for cid in cids:
+                    if cid not in self._cluster_by_id:
+                        continue
+                    self._fails.append((e.time, cid, e.gpus, e.repair_seconds))
+                    if e.warning_seconds > 0:
+                        self._warns.append((e.time - e.warning_seconds, cid, e.time))
+            self._fails.sort()
+            self._warns.sort()
+        self._has_failures = bool(self._fails)
+        self._reliability = self._has_failures or self.cfg.cadence is not None
+        self._tau: Optional[np.ndarray] = None
+        if self.cfg.cadence is not None and self._jobs_list:
+            clusters = fleet.clusters()
+            gpn = clusters[0].gpus_per_node if clusters else 8
+            self._tau = np.atleast_1d(
+                np.asarray(
+                    self.cfg.cadence.interval_seconds(
+                        np.array([j.checkpoint_bytes for j in self._jobs_list], float),
+                        np.array([j.demand_gpus for j in self._jobs_list], float),
+                        gpn,
+                    ),
+                    np.float64,
+                )
+            )
 
     # -- cost charging ---------------------------------------------------------
     def _charge(self, j: Job, seconds: float) -> None:
@@ -230,6 +337,119 @@ class FleetSimulator:
             return
         j.downtime_until = max(j.downtime_until, self.now) + seconds
         j.downtime_seconds += seconds
+
+    # -- reliability tick (shared by both event loops) -------------------------
+    def _tick_reliability(self, active: List[Job]) -> List[Job]:
+        """Apply due repairs, drain warnings, failures and cadence
+        snapshots at ``self.now``; returns the jobs whose runtime state
+        (allocation / progress / downtime) changed so the vectorized loop
+        can resync its arrays.  Operates purely on job objects — the
+        legacy and vectorized loops share it verbatim."""
+        changed = self._process_failures(active) if self._has_failures else []
+        if self.cfg.cadence is not None:
+            changed.extend(self._cadence_snapshots(active))
+        return changed
+
+    def _process_failures(self, active: List[Job]) -> List[Job]:
+        now = self.now
+        # repairs due: the domain's capacity comes back — but only down
+        # to the other failures still outstanding on the same cluster
+        while self._repairs and self._repairs[0][0] <= now:
+            _, cid, g = heapq.heappop(self._repairs)
+            c = self._cluster_by_id[cid]
+            self._outstanding[cid] = max(0, self._outstanding.get(cid, 0) - g)
+            c.dead_gpus = min(c.total_gpus, self._outstanding[cid])
+        # drain warnings: the policy sees the domain as draining from here
+        warns = self._warns
+        while self._warn_ptr < len(warns) and warns[self._warn_ptr][0] <= now:
+            _, cid, deadline = warns[self._warn_ptr]
+            self._warn_ptr += 1
+            c = self._cluster_by_id[cid]
+            c.draining = True
+            c.drain_deadline = deadline
+        # failures due in (previous event, now]
+        fired = []
+        fails = self._fails
+        while self._fail_ptr < len(fails) and fails[self._fail_ptr][0] <= now:
+            fired.append(fails[self._fail_ptr])
+            self._fail_ptr += 1
+        if not fired:
+            return []
+        by_cluster: Dict[str, List[Job]] = {}
+        for j in active:
+            if j.done_at is None and j.allocated > 0 and j.cluster is not None:
+                by_cluster.setdefault(j.cluster, []).append(j)
+        changed: List[Job] = []
+        for e_time, cid, gpus, repair in fired:
+            c = self._cluster_by_id[cid]
+            want = c.total_gpus if gpus <= 0 else min(gpus, c.total_gpus)
+            # repair is anchored to the FAILURE time, not the processing
+            # tick; a sub-tick outage (already repaired) still kills its
+            # victims but never marks capacity dead.  The UNCLAMPED
+            # amount joins the cluster's outstanding sum so overlapping
+            # failures never resurrect capacity early (dead capacity is
+            # min(total, outstanding) until each failure's own repair).
+            if e_time + repair > now and want > 0:
+                self._outstanding[cid] = self._outstanding.get(cid, 0) + want
+                c.dead_gpus = min(c.total_gpus, self._outstanding[cid])
+                heapq.heappush(self._repairs, (e_time + repair, cid, want))
+            if c.draining and e_time >= c.drain_deadline - 1e-9:
+                # the warned drain itself fired: dead capacity takes over.
+                # An unrelated failure inside the warning window must NOT
+                # cancel the drain — evacuation continues to the deadline.
+                c.draining = False
+            self.failure_events += 1
+            # victims: jobs whose devices intersect the failed span.  Jobs
+            # pack the cluster in (arrival, id) order; a partial failure
+            # of W GPUs takes out every job overlapping the first W.
+            pool = sorted(by_cluster.get(cid, []), key=lambda j: (j.arrival, j.id))
+            if want >= c.total_gpus:
+                victims = list(pool)
+            else:
+                victims, cum = [], 0
+                for j in pool:
+                    if cum >= want:
+                        break
+                    victims.append(j)
+                    cum += j.allocated
+            if victims:
+                vset = set(id(v) for v in victims)
+                by_cluster[cid] = [j for j in pool if id(j) not in vset]
+            for j in victims:
+                lost = max(0.0, j.progress - j.snap_progress)
+                self.lost_work_gpu_seconds += lost * j.gpu_hours * 3600.0
+                self._lost_by_tier[j.tier] += lost * j.gpu_hours * 3600.0
+                j.progress = j.snap_progress
+                j.allocated = 0
+                j.failures += 1
+                j.failed_at = now
+                j.queued_since = now  # fairness aging restarts here
+                self.job_failures += 1
+                changed.append(j)
+        return changed
+
+    def _cadence_snapshots(self, active: List[Job]) -> List[Job]:
+        """Periodic snapshots per the Young–Daly cadence: running jobs
+        past their interval checkpoint now, paying the snapshot's
+        downtime in exchange for bounding the work a failure can claw
+        back.  ``Job.progress`` must be current (the vectorized loop
+        syncs it before calling)."""
+        if self._tau is None:
+            return []
+        now = self.now
+        changed: List[Job] = []
+        for j in active:
+            if j.done_at is not None or j.allocated <= 0:
+                continue
+            i = self._index[j.id]
+            if now - j.snap_time < self._tau[i] - 1e-9:
+                continue
+            j.snap_progress = j.progress
+            j.snap_time = now
+            self._charge(j, self.costs.snapshot_seconds(j.checkpoint_bytes))
+            self.snapshots += 1
+            changed.append(j)
+        return changed
 
     # -- decision application (shared by both event loops) ---------------------
     def _apply(self, decision: Decision) -> None:
@@ -243,10 +463,15 @@ class FleetSimulator:
             if prev_g > 0 and gpus == 0:
                 # preemption: quiesce + dump + upload.  Work-conserving —
                 # the cost is carried as debt and delays the next restore.
+                # The graceful checkpoint is a durable snapshot: a later
+                # failure can only claw back work past this point.
                 j.preemptions += 1
                 self.preemptions += 1
                 j.restore_debt += self.costs.preempt_seconds(j.checkpoint_bytes)
                 j.queued_since = self.now  # fairness aging restarts here
+                if self._reliability:
+                    j.snap_progress = j.progress
+                    j.snap_time = self.now
             elif prev_g == 0 and gpus > 0:
                 # (re)start.  First admission is free; a restore pays
                 # download + rendezvous + the carried preempt debt.  A
@@ -265,6 +490,18 @@ class FleetSimulator:
                         + self.costs.restore_seconds(j.checkpoint_bytes, src, dst),
                     )
                     j.restore_debt = 0.0
+                    if j.failed_at is not None:
+                        # restart after an unplanned failure: ETTR sample
+                        cause = "failure"
+                        self._ettr_sum[j.tier] += self.now - j.failed_at
+                        self._ettr_n[j.tier] += 1
+                        j.failed_at = None
+                    else:
+                        cause = "preempt"
+                    if self._reliability:
+                        self.restarts_by_cause[cause] = (
+                            self.restarts_by_cause.get(cause, 0) + 1
+                        )
             elif (
                 gpus > 0
                 and cluster is not None
@@ -273,7 +510,8 @@ class FleetSimulator:
             ):
                 # live migration (possibly with a simultaneous resize —
                 # still one event, one Table-5 round trip); the transfer
-                # leg is priced by the (source, destination) region pair
+                # leg is priced by the (source, destination) region pair.
+                # The round trip checkpoints state: snapshot refreshes.
                 j.migrations += 1
                 self.migrations += 1
                 src = self.fleet.region_of(j.cluster)
@@ -283,6 +521,9 @@ class FleetSimulator:
                 self._charge(
                     j, self.costs.migrate_seconds(j.checkpoint_bytes, src, dst)
                 )
+                if self._reliability:
+                    j.snap_progress = j.progress
+                    j.snap_time = self.now
             elif gpus > 0 and gpus != prev_g:
                 # in-place transparent resize (splice swap)
                 j.resizes += 1
@@ -302,12 +543,17 @@ class FleetSimulator:
                 j.restore_debt += self.costs.preempt_seconds(j.checkpoint_bytes)
                 j.allocated = 0
                 j.queued_since = self.now
+                if self._reliability:
+                    j.snap_progress = j.progress
+                    j.snap_time = self.now
         if self.cfg.validate:
             self._check_capacity(decision)
 
     def _check_capacity(self, decision: Decision) -> None:
         """Fleet-capacity conservation: no decision may over-allocate any
-        cluster or the fleet."""
+        cluster or the fleet — counting only HEALTHY capacity, so a
+        failed-out domain's GPUs cannot be handed out while it awaits
+        repair."""
         used: Dict[str, int] = {}
         total = 0
         for jid, (g, c) in decision.alloc.items():
@@ -316,13 +562,11 @@ class FleetSimulator:
             total += g
             if c is not None:
                 used[c] = used.get(c, 0) + g
-        assert (
-            total <= self.fleet.total()
-        ), f"fleet over-allocated: {total} > {self.fleet.total()}"
+        cap = self.fleet.capacity()
+        assert total <= cap, f"fleet over-allocated: {total} > {cap}"
         for c, u in used.items():
-            assert (
-                u <= self._cluster_caps[c]
-            ), f"cluster {c} over-allocated: {u} > {self._cluster_caps[c]}"
+            healthy = self._cluster_by_id[c].capacity()
+            assert u <= healthy, f"cluster {c} over-allocated: {u} > {healthy}"
 
     # ==================== legacy (seed) event loop ============================
     # O(jobs) Python scan per event; kept as the measured baseline for
@@ -370,11 +614,10 @@ class FleetSimulator:
             # only arrived jobs are visible to the policy (StaticGangPolicy
             # does not filter by arrival itself; the vectorized loop only
             # ever activates arrived jobs, and the two must agree)
-            decision = self.policy.decide(
-                self.now,
-                [j for j in self.jobs.values() if j.arrival <= self.now],
-                self.fleet,
-            )
+            arrived = [j for j in self.jobs.values() if j.arrival <= self.now]
+            if self._reliability:
+                self._tick_reliability([j for j in arrived if j.done_at is None])
+            decision = self.policy.decide(self.now, arrived, self.fleet)
             self._apply(decision)
 
     # ==================== vectorized event loop ===============================
@@ -496,6 +739,16 @@ class FleetSimulator:
                 break
             if act.size:
                 active_jobs = [jobs[i] for i in act]
+                if self._reliability:
+                    # failures/cadence read and mutate per-job progress:
+                    # sync the arrays out, tick reliability, sync back
+                    for i in act:
+                        jobs[i].progress = float(self._progress[i])
+                    for j in self._tick_reliability(active_jobs):
+                        i = self._index[j.id]
+                        self._alloc[i] = j.allocated
+                        self._progress[i] = j.progress
+                        self._downtime_until[i] = j.downtime_until
                 decision = self.policy.decide(t, active_jobs, self.fleet)
                 self._apply(decision)
                 for i in act:
@@ -534,6 +787,24 @@ class FleetSimulator:
                     ok += 1
             sla[tier] = ok / len(tjobs)
             jct[tier] = float(np.mean([j.done_at - j.arrival for j in tjobs]))
+        consumed = self.busy_gpu_seconds + self.gpu_seconds_dead
+        goodput = (
+            max(0.0, self.busy_gpu_seconds - self.lost_work_gpu_seconds) / consumed
+            if consumed > 0
+            else 1.0
+        )
+        goodput_vals: Dict[str, List[float]] = {t: [] for t in TIERS}
+        for j in jobs:
+            if j.arrival >= self.now:
+                continue
+            end = j.done_at if j.done_at is not None else self.now
+            if end > j.arrival:
+                goodput_vals[j.tier].append(
+                    min(1.0, j.progress * j.ideal_seconds / (end - j.arrival))
+                )
+        goodput_by_tier = {
+            t: float(np.mean(v)) for t, v in goodput_vals.items() if v
+        }
         return SimResult(
             utilization=self.busy_gpu_seconds / total_gpu_seconds,
             sla_attainment=sla,
@@ -552,4 +823,16 @@ class FleetSimulator:
             downtime_by_tier={t: v for t, v in downtime.items() if v > 0},
             migrations_cross_region=self.migrations_cross_region,
             restores_cross_region=self.restores_cross_region,
+            failure_events=self.failure_events,
+            job_failures=self.job_failures,
+            snapshots=self.snapshots,
+            lost_work_gpu_seconds=self.lost_work_gpu_seconds,
+            goodput_fraction=goodput,
+            goodput_by_tier=goodput_by_tier,
+            restarts_by_cause=dict(self.restarts_by_cause),
+            ettr_by_tier={
+                t: self._ettr_sum[t] / self._ettr_n[t]
+                for t in TIERS
+                if self._ettr_n[t] > 0
+            },
         )

@@ -10,14 +10,33 @@ from repro.scheduler.costs import RegionTopology, default_checkpoint_bytes
 
 @dataclasses.dataclass
 class Cluster:
+    """One cluster: ``total_gpus`` devices grouped into nodes of
+    ``gpus_per_node`` (the failure-domain granularity between a single
+    device flake and a whole-cluster outage).  ``dead_gpus`` is capacity
+    currently taken out by an unrepaired failure; ``draining`` marks a
+    planned drain in its advance-warning window (the policy avoids
+    placing onto draining clusters and proactively migrates off them)
+    with ``drain_deadline`` the wall time capacity actually dies."""
+
     id: str
     region: str
     total_gpus: int
     free_gpus: int = -1
+    gpus_per_node: int = 8
+    dead_gpus: int = 0
+    draining: bool = False
+    drain_deadline: float = 0.0
 
     def __post_init__(self):
         if self.free_gpus < 0:
             self.free_gpus = self.total_gpus
+
+    def nodes(self) -> int:
+        return max(1, -(-self.total_gpus // max(self.gpus_per_node, 1)))
+
+    def capacity(self) -> int:
+        """GPUs currently healthy (total minus failed-out capacity)."""
+        return max(0, self.total_gpus - self.dead_gpus)
 
 
 @dataclasses.dataclass
@@ -30,6 +49,9 @@ class Region:
 
     def free(self) -> int:
         return sum(c.free_gpus for c in self.clusters)
+
+    def capacity(self) -> int:
+        return sum(c.capacity() for c in self.clusters)
 
 
 @dataclasses.dataclass
@@ -46,6 +68,11 @@ class Fleet:
 
     def total(self) -> int:
         return sum(r.total() for r in self.regions)
+
+    def capacity(self) -> int:
+        """Healthy GPUs fleet-wide — what the scheduler may allocate
+        while failed-out domains await repair."""
+        return sum(r.capacity() for r in self.regions)
 
     def free(self) -> int:
         return sum(r.free() for r in self.regions)
@@ -106,6 +133,14 @@ class Job:
     restore_debt: float = 0.0  # preempt cost carried into the next restore
     ever_ran: bool = False  # has a checkpoint to restore from
 
+    # reliability state (maintained by the simulator's failure machinery):
+    # a durable snapshot exists at progress ``snap_progress`` taken at wall
+    # time ``snap_time``; an unplanned failure rolls progress back to it.
+    snap_progress: float = 0.0
+    snap_time: float = 0.0
+    failures: int = 0  # unplanned failures that killed this job's domain
+    failed_at: Optional[float] = None  # pending failure awaiting restart
+
     def __post_init__(self):
         assert self.tier in TIERS
         if self.account is None:
@@ -114,6 +149,8 @@ class Job:
             self.queued_since = self.arrival
         if self.checkpoint_bytes <= 0:
             self.checkpoint_bytes = default_checkpoint_bytes(self.demand_gpus)
+        if self.snap_time <= 0.0:
+            self.snap_time = self.arrival  # initial state = restartable
 
     @property
     def ideal_seconds(self) -> float:

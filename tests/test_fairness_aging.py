@@ -115,6 +115,101 @@ def test_aging_identical_across_vectorized_and_scalar_paths():
     assert digests[True] == digests[False]
 
 
+def _two_tier_overload(aging_rate, horizon: float, vectorized: bool = True):
+    """One saturated 64-GPU cluster: two premium hogs, plus one premium
+    and one standard waiter queueing behind them — per-tier aging rates
+    decide who gets rotated in."""
+    fleet = Fleet([Region("r0", [Cluster("r0c0", "r0", 64)])])
+    jobs = []
+    for k in range(2):
+        jobs.append(
+            Job(
+                id=f"hog{k}",
+                tier="premium",
+                demand_gpus=32,
+                gpu_hours=32 * 1000.0,
+                arrival=0.0,
+                min_gpus=32,
+                checkpoint_bytes=BIG_CKPT,
+            )
+        )
+    for tier in ("premium", "standard"):
+        jobs.append(
+            Job(
+                id=f"wait_{tier}",
+                tier=tier,
+                demand_gpus=32,
+                gpu_hours=32 * 1000.0,
+                arrival=300.0,
+                min_gpus=32,
+                checkpoint_bytes=BIG_CKPT,
+            )
+        )
+    policy = ElasticPolicy(
+        expand_factor=1.0, aging_rate=aging_rate, vectorized=vectorized
+    )
+    sim = FleetSimulator(
+        fleet,
+        jobs,
+        policy,
+        SimConfig(horizon_seconds=horizon, tick_seconds=TICK, cost_model=CostModel()),
+    )
+    return sim, sim.run()
+
+
+def test_per_tier_rates_age_premium_ahead_of_standard():
+    """With premium aging 8x faster than standard, the premium waiter is
+    rotated in while the (equally starved) standard waiter still queues;
+    a tier absent from the mapping never ages at all."""
+    sim, res = _two_tier_overload(
+        {"premium": 8.0, "standard": 0.1}, horizon=10 * 3600.0
+    )
+    assert sim.jobs["wait_premium"].ever_ran
+    assert not sim.jobs["wait_standard"].ever_ran
+    assert res.preemptions >= 1
+    # standard missing from the map == standard never ages
+    sim2, _ = _two_tier_overload({"standard": 0.0}, horizon=10 * 3600.0)
+    assert not sim2.jobs["wait_standard"].ever_ran
+
+
+def test_per_tier_rates_keep_vectorized_scalar_equivalence():
+    """The decision-hash gate must hold with a per-tier rate mapping."""
+    digests = {}
+    for vectorized in (True, False):
+        sim, _ = _two_tier_overload(
+            {"premium": 4.0, "standard": 0.5},
+            horizon=8 * 3600.0,
+            vectorized=vectorized,
+        )
+        digest = hashlib.sha256()
+        for jid in sorted(sim.jobs):
+            j = sim.jobs[jid]
+            digest.update(
+                repr(
+                    (jid, j.allocated, j.preemptions, j.resizes, j.progress)
+                ).encode()
+            )
+        digests[vectorized] = digest.hexdigest()
+    assert digests[True] == digests[False]
+
+
+def test_scalar_rate_is_equivalent_to_uniform_mapping():
+    """Back-compat: a float rate and the equivalent per-tier mapping
+    produce identical runs."""
+    for vectorized in (True, False):
+        a, res_a = _two_tier_overload(1.0, horizon=8 * 3600.0, vectorized=vectorized)
+        b, res_b = _two_tier_overload(
+            {"premium": 1.0, "standard": 1.0, "basic": 1.0},
+            horizon=8 * 3600.0,
+            vectorized=vectorized,
+        )
+        assert res_a.preemptions == res_b.preemptions
+        assert res_a.utilization == res_b.utilization
+        for jid in a.jobs:
+            assert a.jobs[jid].allocated == b.jobs[jid].allocated
+            assert a.jobs[jid].progress == b.jobs[jid].progress
+
+
 def test_aging_is_noop_when_queue_drains():
     """On an underloaded fleet every decision with aging enabled equals
     the decision without it — aging only reorders under starvation."""

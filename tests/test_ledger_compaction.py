@@ -1,0 +1,154 @@
+"""Ledger compaction: finalized interval prefixes collapse into summary
+rows without changing what the scheduler observes.
+
+A months-long churny job appends SLA intervals forever; compaction keeps
+the fleet ledger's interval axis bounded by churn within the keep
+horizon instead of job lifetime.  The contract: for the scheduler's
+query pattern (monotone ``now``, consistent window sizes), a compacting
+ledger answers identically to the scalar ``GpuFractionAccount`` oracle —
+property-tested here at 1e-9 — while the scalar account's interval list
+grows without bound.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sla import (
+    HOUR,
+    FleetSLAAccounts,
+    FleetSlotAccount,
+    GpuFractionAccount,
+)
+
+TIER_NAMES = ["premium", "standard", "basic"]
+
+
+def _churn(rng, view, oracle, n_records, query_every=5, window=HOUR):
+    """Drive both accounts through an identical churny record stream with
+    monotone interleaved queries; returns the max |ledger - oracle|."""
+    t = 0.0
+    err = 0.0
+    demand = oracle.demand
+    for i in range(n_records):
+        dt = float(rng.uniform(30.0, 900.0))
+        g = int(rng.integers(0, demand + 2)) if demand > 0 else 0
+        view.record(t, t + dt, g)
+        oracle.record(t, t + dt, g)
+        t += dt
+        if i % query_every == 0:
+            now = t + float(rng.uniform(0.0, 120.0))
+            err = max(
+                err,
+                abs(
+                    view.worst_window_fraction(now, window)
+                    - oracle.worst_window_fraction(now, window)
+                ),
+                abs(view.headroom(now, window) - oracle.headroom(now, window)),
+            )
+    return err, t
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10**6), n_records=st.integers(50, 400))
+def test_compacting_ledger_matches_scalar_oracle(seed, n_records):
+    """Tiny axis + aggressive compaction thresholds force constant
+    compaction; every interleaved query must still match the oracle."""
+    rng = np.random.Generator(np.random.Philox(seed))
+    ledger = FleetSLAAccounts(
+        slot_capacity=1,
+        interval_capacity=2,
+        compact_after=8,
+        keep_horizon_seconds=2 * HOUR,
+    )
+    tier = TIER_NAMES[int(rng.integers(0, 3))]
+    demand = int(rng.integers(1, 13))
+    view = FleetSlotAccount(ledger, tier, demand)
+    oracle = GpuFractionAccount(tier, demand)
+    err, _ = _churn(rng, view, oracle, n_records)
+    assert err < 1e-9, err
+
+
+def test_interval_axis_stays_bounded_while_oracle_grows():
+    """The point of compaction: months of churn, bounded axis."""
+    rng = np.random.Generator(np.random.Philox(0))
+    ledger = FleetSLAAccounts(
+        slot_capacity=1,
+        interval_capacity=2,
+        compact_after=16,
+        keep_horizon_seconds=2 * HOUR,
+    )
+    view = FleetSlotAccount(ledger, "standard", 8)
+    oracle = GpuFractionAccount("standard", 8)
+    err, t = _churn(rng, view, oracle, 8000)
+    assert err < 1e-9
+    assert t > 30 * 24 * 3600.0  # over a month of simulated churn
+    assert len(oracle.intervals) > 4000  # the scalar account grew linearly
+    assert ledger._iv_cap <= 64  # the ledger's axis did not
+    assert int(ledger._count[0]) <= 64
+
+
+def test_explicit_compact_frees_rows_and_preserves_queries():
+    ledger = FleetSLAAccounts(slot_capacity=1, interval_capacity=2, compact_after=None)
+    view = FleetSlotAccount(ledger, "standard", 8)
+    oracle = GpuFractionAccount("standard", 8)
+    t = 0.0
+    for i in range(500):
+        g = [8, 0, 4, 8][i % 4]
+        view.record(t, t + 600.0, g)
+        oracle.record(t, t + 600.0, g)
+        t += 600.0
+    now = t + 10.0
+    before = view.worst_window_fraction(now)  # initializes the window cache
+    rows = int(ledger._count[0])
+    freed = ledger.compact()
+    assert freed > 0
+    assert int(ledger._count[0]) == rows - freed
+    assert abs(view.worst_window_fraction(now) - before) < 1e-12
+    # queries keep matching the oracle as time moves on
+    for _ in range(20):
+        view.record(t, t + 600.0, 4)
+        oracle.record(t, t + 600.0, 4)
+        t += 600.0
+        assert abs(view.headroom(t) - oracle.headroom(t)) < 1e-9
+
+
+def test_compaction_skips_unfinalized_and_kept_suffix():
+    """Nothing inside the keep horizon may be summarized: a fresh ledger
+    whose whole history is recent compacts to nothing."""
+    ledger = FleetSLAAccounts(
+        slot_capacity=1,
+        interval_capacity=2,
+        compact_after=None,
+        keep_horizon_seconds=24 * HOUR,
+    )
+    view = FleetSlotAccount(ledger, "premium", 4)
+    t = 0.0
+    for i in range(20):
+        view.record(t, t + 300.0, i % 5)
+        t += 300.0  # 100 minutes total — all inside the keep horizon
+    assert ledger.compact() == 0
+
+
+def test_slot_reuse_after_compaction():
+    """A released slot's summary row must not leak into its next tenant."""
+    ledger = FleetSLAAccounts(
+        slot_capacity=1,
+        interval_capacity=2,
+        compact_after=8,
+        keep_horizon_seconds=HOUR,
+    )
+    view = FleetSlotAccount(ledger, "standard", 8)
+    t = 0.0
+    for i in range(200):
+        view.record(t, t + 600.0, [8, 0][i % 2])
+        t += 600.0
+    view.worst_window_fraction(t)
+    view.release()
+    fresh = FleetSlotAccount(ledger, "premium", 2)
+    oracle = GpuFractionAccount("premium", 2)
+    t2 = 5000.0
+    for i in range(50):
+        g = [2, 1, 0][i % 3]
+        fresh.record(t2, t2 + 400.0, g)
+        oracle.record(t2, t2 + 400.0, g)
+        t2 += 400.0
+        assert abs(fresh.headroom(t2) - oracle.headroom(t2)) < 1e-9

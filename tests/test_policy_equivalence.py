@@ -203,6 +203,64 @@ def test_cost_model_calibrates_from_migration_reports():
     assert abs(cm.migrate_seconds(cb) - measured) / measured < 1e-6
 
 
+def _report(i, nbytes, blob_bw, src=None, dst=None):
+    return MigrationReport(
+        job_id=f"j{i}",
+        from_physical=4,
+        to_physical=2,
+        barrier_seconds=1.0,
+        barrier_minibatches=2,
+        dump_seconds=nbytes / 32e9,
+        upload_seconds=nbytes / blob_bw,
+        download_seconds=nbytes / blob_bw,
+        restore_seconds=5.0,
+        total_seconds=0.0,
+        device_stored_bytes=nbytes,
+        host_stored_bytes=0,
+        work_conserving=True,
+        src_region=src,
+        dst_region=dst,
+    )
+
+
+def test_from_reports_fits_per_region_pair_bandwidths():
+    """Reports carrying src/dst regions calibrate a RegionTopology: intra
+    reports set the base blob tier, each measured cross pair gets its own
+    fitted link, and unmeasured pairs fall back to the slowest tier."""
+    gib = 1 << 30
+    reports = (
+        [_report(i, 4 * gib, 2e9, "r0", "r0") for i in range(2)]
+        + [_report(10 + i, 4 * gib, 0.5e9, "r0", "r1") for i in range(2)]
+        + [_report(20 + i, 4 * gib, 0.25e9, "r0", "r2") for i in range(2)]
+    )
+    cm = CostModel.from_reports(reports)
+    assert abs(cm.blob_bandwidth - 2e9) / 2e9 < 1e-6
+    topo = cm.topology
+    assert topo is not None
+    assert abs(topo.bandwidth("r0", "r1") - 0.5e9) / 0.5e9 < 1e-6
+    assert abs(topo.bandwidth("r0", "r2") - 0.25e9) / 0.25e9 < 1e-6
+    # unmeasured pair: the slowest fitted tier, not intra speed
+    assert topo.bandwidth("r1", "r2") == topo.cross_bandwidth
+    assert abs(topo.cross_bandwidth - 0.25e9) / 0.25e9 < 1e-6
+    # the calibrated model reproduces each measured end-to-end downtime
+    for r in (reports[0], reports[2], reports[4]):
+        measured = (
+            r.barrier_seconds
+            + r.dump_seconds
+            + r.upload_seconds
+            + r.download_seconds
+            + r.restore_seconds
+        )
+        charged = cm.migrate_seconds(
+            r.device_stored_bytes, r.src_region, r.dst_region
+        )
+        assert abs(charged - measured) / measured < 1e-6
+    # an explicitly-passed topology is never overwritten by the fit
+    fixed = RegionTopology.tiered(["r0", "r1"])
+    cm2 = CostModel.from_reports(reports, topology=fixed)
+    assert cm2.topology is fixed
+
+
 def test_victim_selection_prefers_cheap_checkpoints():
     """Two equal-tier running jobs, capacity for one: the survivor must be
     the one whose checkpoint is expensive to move, regardless of arrival
