@@ -9,7 +9,12 @@ reports jobs/sec plus the decide-path seconds (time inside
 ``policy.decide``):
 
 - ``vectorized``      — full trace, vectorized policy + vectorized loop,
-                        batched SLA ledger.
+                        batched SLA ledger, fleet JobTable (column-slice
+                        decide path; ``gather_seconds`` reports the
+                        per-tick state-gather share of the decide time).
+- ``--no-job-table``  — same, but plain scalar Job objects: the decide
+                        path rebuilds its per-job base arrays in Python
+                        every tick (the pre-JobTable baseline).
 - ``--no-sla-ledger`` — same, but per-job scalar SLA accounts (the PR 2
                         baseline): the decide path falls back to one
                         Python ``headroom`` query per guaranteed job.
@@ -32,11 +37,16 @@ planet-scale acceptance run, with and without the ledger):
     PYTHONPATH=src python benchmarks/sched_scale.py \\
         --jobs 1000000 --regions 8 --clusters-per-region 8 --no-sla-ledger
 
-``--check-equivalence`` re-runs the whole trace under the scalar
-reference policy (fairness aging enabled in both, as in production) and
-exits non-zero unless both the aggregates and the hash of the full
-decision sequence match the vectorized run exactly — the CI gate that
-keeps the numpy passes honest.
+``--check-equivalence`` re-runs the whole trace under every other
+{JobTable, plain jobs} x {vectorized, scalar reference} combination
+(fairness aging enabled throughout, as in production) and exits non-zero
+unless the aggregates and the hash of the full decision sequence match
+the main run exactly — the CI gate that keeps the numpy passes honest.
+When the ``--json`` target already exists (the committed
+``BENCH_sched.json``), its ``decide_seconds`` is the budget: the run
+also fails if the new decide time exceeds it by more than
+``DECIDE_BUDGET_FACTOR`` (2x — host noise passes, a reintroduced
+per-job gather does not).
 
 ``--failure-trace storm`` adds a reliability row: the same trace is
 replayed under a seeded failure storm (sampled device/node/cluster
@@ -120,6 +130,13 @@ class _TimedPolicy:
         self.name = inner.name
         self.decide_seconds = 0.0
         self._digest = hashlib.sha256() if digest else None
+
+    @property
+    def gather_seconds(self) -> float:
+        """Seconds of ``decide_seconds`` spent gathering per-job state
+        into arrays (the JobTable column slices, or the per-job
+        base-array build they replace)."""
+        return getattr(self.inner, "gather_seconds", 0.0)
 
     def bind_costs(self, cost_model, interval_hint) -> None:
         self.inner.bind_costs(cost_model, interval_hint)
@@ -222,11 +239,11 @@ def bench_failures(
 ) -> Dict:
     """Reliability row: replay a seeded failure scenario on the trace,
     with and without the Young–Daly checkpoint cadence, gating (a) the
-    vectorized==scalar decision digests under the storm and (b) the
-    strict goodput win cadence must deliver over checkpoint-on-preempt-
-    only."""
+    vectorized==scalar and JobTable==plain-job decision digests under
+    the storm and (b) the strict goodput win cadence must deliver over
+    checkpoint-on-preempt-only."""
 
-    def _run(policy, cadence):
+    def _run(policy, cadence, job_table: bool = True):
         fleet = _fleet(regions, clusters_per_region, gpus_per_cluster)
         horizon = _horizon(n_jobs, fleet.total())
         sim = FleetSimulator(
@@ -238,6 +255,7 @@ def bench_failures(
                 cost_model=CostModel(),
                 failures=_failure_trace(spec, fleet, horizon),
                 cadence=cadence,
+                job_table=job_table,
             ),
         )
         res = sim.run()
@@ -281,18 +299,29 @@ def bench_failures(
     if check_equivalence:
         ref = _TimedPolicy(ElasticPolicy(vectorized=False), digest=True)
         ref_res, _ = _run(ref, None)
+        plain = _TimedPolicy(ElasticPolicy(), digest=True)
+        plain_res, _ = _run(plain, None, job_table=False)
         same = (
             vec.digest() == ref.digest()
+            and vec.digest() == plain.digest()
             and _result_signature(base) == _result_signature(ref_res)
+            and _result_signature(base) == _result_signature(plain_res)
             and base.lost_work_gpu_seconds == ref_res.lost_work_gpu_seconds
+            and base.lost_work_gpu_seconds == plain_res.lost_work_gpu_seconds
         )
         out["decision_digest"] = vec.digest()
         out["equivalence"] = "ok" if same else "FAILED"
         print(
-            f"failure-storm equivalence: {out['equivalence']} "
-            f"(digest {vec.digest()[:12]}...)"
+            f"failure-storm equivalence (scalar policy + plain jobs): "
+            f"{out['equivalence']} (digest {vec.digest()[:12]}...)"
         )
     return out
+
+
+# a regression must exceed the committed decide_seconds by this factor
+# before the gate trips: CI hosts vary run to run, and the gate should
+# catch a reintroduced per-job gather (a multi-x regression), not noise
+DECIDE_BUDGET_FACTOR = 2.0
 
 
 def bench(
@@ -304,7 +333,19 @@ def bench(
     json_path: Optional[str],
     sla_ledger: bool = True,
     failure_spec: Optional[str] = None,
+    job_table: bool = True,
 ) -> Dict:
+    # the committed BENCH_sched.json (if the target already exists) is
+    # the decide-time budget the new run is gated against
+    budget = None
+    if json_path and os.path.exists(json_path):
+        try:
+            with open(json_path) as f:
+                committed = json.load(f)
+            if committed.get("jobs") == n_jobs:
+                budget = float(committed["decide_seconds"])
+        except (ValueError, KeyError, OSError):
+            budget = None
     fleet = _fleet(regions, clusters_per_region, gpus_per_cluster)
     horizon = _horizon(n_jobs, fleet.total())
     policy = _TimedPolicy(ElasticPolicy(), digest=check_equivalence)
@@ -312,7 +353,7 @@ def bench(
         fleet,
         _trace(n_jobs, fleet.total()),
         policy,
-        SimConfig(horizon_seconds=horizon, sla_ledger=sla_ledger),
+        SimConfig(horizon_seconds=horizon, sla_ledger=sla_ledger, job_table=job_table),
     )
     t0 = time.perf_counter()
     res = sim.run()
@@ -323,16 +364,21 @@ def bench(
         "wall_seconds": wall,
         "jobs_per_sec": n_jobs / wall,
         "decide_seconds": policy.decide_seconds,
+        "gather_seconds": policy.gather_seconds,
         "sla_ledger": sla_ledger,
+        "job_table": job_table,
         "events": sim.events_processed,
         "equivalence": "skipped",
+        "decide_gate": "skipped",
         **_result_signature(res),
     }
     msg = (
-        f"vectorized[ledger={'on' if sla_ledger else 'off'}]: "
+        f"vectorized[ledger={'on' if sla_ledger else 'off'}, "
+        f"table={'on' if job_table else 'off'}]: "
         f"{n_jobs} jobs in {wall:.1f}s "
         f"({out['jobs_per_sec']:.0f} jobs/sec, "
-        f"decide-path {policy.decide_seconds:.1f}s), "
+        f"decide-path {policy.decide_seconds:.1f}s, "
+        f"gather {policy.gather_seconds:.2f}s), "
         f"util={res.utilization:.3f} done={res.completed} "
         f"dead={res.gpu_seconds_dead / 3600:.0f} gpu-h "
         f"migr={res.migrations} ({res.migrations_cross_region} cross)"
@@ -340,34 +386,66 @@ def bench(
     print(msg)
 
     if check_equivalence:
-        fleet2 = _fleet(regions, clusters_per_region, gpus_per_cluster)
-        ref_policy = _TimedPolicy(ElasticPolicy(vectorized=False), digest=True)
-        ref = FleetSimulator(
-            fleet2,
-            _trace(n_jobs, fleet2.total()),
-            ref_policy,
-            SimConfig(horizon_seconds=horizon, sla_ledger=sla_ledger),
-        )
-        ref_res = ref.run()
-        a, b = _result_signature(res), _result_signature(ref_res)
+        # every representation x policy-path combination must reproduce
+        # the main run's decision sequence exactly: {JobTable, plain
+        # jobs} x {vectorized, scalar reference}
+        combos = [(True, True), (True, False), (False, True), (False, False)]
+        combos.remove((True, job_table))
         out["decision_digest"] = policy.digest()
-        if a != b or policy.digest() != ref_policy.digest():
-            out["equivalence"] = "FAILED"
-            err = (
-                "EQUIVALENCE FAILURE: vectorized vs scalar policy "
-                "diverged on the same trace:\n"
-                f"  vec: digest={policy.digest()} {a}\n"
-                f"  ref: digest={ref_policy.digest()} {b}"
+        out["equivalence"] = "ok"
+        sig = _result_signature(res)
+        for vec, jt in combos:
+            fleet2 = _fleet(regions, clusters_per_region, gpus_per_cluster)
+            other = _TimedPolicy(ElasticPolicy(vectorized=vec), digest=True)
+            other_res = FleetSimulator(
+                fleet2,
+                _trace(n_jobs, fleet2.total()),
+                other,
+                SimConfig(
+                    horizon_seconds=horizon,
+                    sla_ledger=sla_ledger,
+                    job_table=jt,
+                ),
+            ).run()
+            label = (
+                f"{'vectorized' if vec else 'scalar'}+"
+                f"{'table' if jt else 'plain'}"
             )
-            print(err, file=sys.stderr)
-        else:
-            out["equivalence"] = "ok"
+            osig = _result_signature(other_res)
+            if osig != sig or other.digest() != policy.digest():
+                out["equivalence"] = "FAILED"
+                err = (
+                    f"EQUIVALENCE FAILURE: {label} diverged on the same "
+                    "trace:\n"
+                    f"  main:  digest={policy.digest()} {sig}\n"
+                    f"  other: digest={other.digest()} {osig}"
+                )
+                print(err, file=sys.stderr)
+        if out["equivalence"] == "ok":
             msg = (
-                f"equivalence: scalar reference matches decision-for-"
-                f"decision ({res.preemptions} preempts, {res.migrations} "
-                f"migrations, {res.resizes} resizes)"
+                f"equivalence: scalar-policy and plain-job runs match "
+                f"decision-for-decision ({res.preemptions} preempts, "
+                f"{res.migrations} migrations, {res.resizes} resizes)"
             )
             print(msg)
+
+    if budget is not None and job_table:
+        out["decide_budget_seconds"] = budget * DECIDE_BUDGET_FACTOR
+        if policy.decide_seconds > budget * DECIDE_BUDGET_FACTOR:
+            out["decide_gate"] = "FAILED"
+            print(
+                f"DECIDE-TIME REGRESSION: {policy.decide_seconds:.2f}s > "
+                f"{DECIDE_BUDGET_FACTOR:.1f}x the committed "
+                f"{budget:.2f}s baseline",
+                file=sys.stderr,
+            )
+        else:
+            out["decide_gate"] = "ok"
+            print(
+                f"decide-time gate: {policy.decide_seconds:.2f}s within "
+                f"{DECIDE_BUDGET_FACTOR:.1f}x of the committed "
+                f"{budget:.2f}s baseline"
+            )
 
     if failure_spec:
         out["reliability"] = bench_failures(
@@ -407,6 +485,7 @@ def run() -> List[Dict]:
     derived = (
         f"jobs_per_sec={n_jobs / vec_wall:.0f};"
         f"decide_s={timed.decide_seconds:.1f};"
+        f"gather_s={timed.gather_seconds:.2f};"
         f"events={sim.events_processed};"
         f"done={res.completed}/{res.total_jobs};"
         f"util={res.utilization:.3f}"
@@ -419,6 +498,34 @@ def run() -> List[Dict]:
         }
     )
 
+    # -- same, plain scalar Job objects (the pre-JobTable decide path:
+    #    per-job attribute gathering rebuilt every tick) ------------------
+    fleet_nt = _fleet()
+    timed_nt = _TimedPolicy(ElasticPolicy())
+    sim_nt = FleetSimulator(
+        fleet_nt,
+        _trace(n_jobs, fleet_nt.total()),
+        timed_nt,
+        SimConfig(horizon_seconds=horizon, job_table=False),
+    )
+    t0 = time.perf_counter()
+    sim_nt.run()
+    nt_wall = time.perf_counter() - t0
+    derived = (
+        f"jobs_per_sec={n_jobs / nt_wall:.0f};"
+        f"decide_s={timed_nt.decide_seconds:.1f};"
+        f"gather_s={timed_nt.gather_seconds:.2f};"
+        f"decide_speedup_table="
+        f"{timed_nt.decide_seconds / max(timed.decide_seconds, 1e-9):.2f}x"
+    )
+    rows.append(
+        {
+            "name": "sched_scale/no_job_table_50k",
+            "us_per_call": nt_wall * 1e6,
+            "derived": derived,
+        }
+    )
+
     # -- same, per-job scalar SLA accounts (PR 2 decide-path baseline) ----
     fleet_nl = _fleet()
     timed_nl = _TimedPolicy(ElasticPolicy())
@@ -426,7 +533,7 @@ def run() -> List[Dict]:
         fleet_nl,
         _trace(n_jobs, fleet_nl.total()),
         timed_nl,
-        SimConfig(horizon_seconds=horizon, sla_ledger=False),
+        SimConfig(horizon_seconds=horizon, sla_ledger=False, job_table=False),
     )
     t0 = time.perf_counter()
     sim_nl.run()
@@ -452,7 +559,7 @@ def run() -> List[Dict]:
         fleet_s,
         _trace(n_jobs, fleet_s.total()),
         ElasticPolicy(vectorized=False),
-        SimConfig(horizon_seconds=horizon, sla_ledger=False),
+        SimConfig(horizon_seconds=horizon, sla_ledger=False, job_table=False),
     )
     t0 = time.perf_counter()
     scalar.run()
@@ -478,7 +585,10 @@ def run() -> List[Dict]:
         ElasticPolicy(vectorized=False),
         # seed configuration throughout: per-event loop, scalar accounts
         SimConfig(
-            horizon_seconds=LEGACY_HORIZON, vectorized=False, sla_ledger=False
+            horizon_seconds=LEGACY_HORIZON,
+            vectorized=False,
+            sla_ledger=False,
+            job_table=False,
         ),
     )
     t0 = time.perf_counter()
@@ -530,6 +640,13 @@ def main(argv: Optional[List[str]] = None) -> int:
         "fleet ledger (the PR 2 decide-path baseline)",
     )
     parser.add_argument(
+        "--no-job-table",
+        action="store_true",
+        help="keep plain scalar Job objects instead of the fleet "
+        "JobTable (the PR 4 decide-path baseline: per-job attribute "
+        "gathering in Python)",
+    )
+    parser.add_argument(
         "--failure-trace",
         type=str,
         default=None,
@@ -560,8 +677,9 @@ def main(argv: Optional[List[str]] = None) -> int:
         args.json,
         sla_ledger=not args.no_sla_ledger,
         failure_spec=args.failure_trace,
+        job_table=not args.no_job_table,
     )
-    if out["equivalence"] == "FAILED":
+    if out["equivalence"] == "FAILED" or out["decide_gate"] == "FAILED":
         return 1
     rel = out.get("reliability")
     if rel is not None:

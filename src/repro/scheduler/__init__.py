@@ -5,6 +5,7 @@ from repro.scheduler.costs import (
     UniformCostModel,
 )
 from repro.scheduler.executor import FleetExecutor, ManagedJob
+from repro.scheduler.job_table import JobTable, JobView, TableJob
 from repro.scheduler.policy import ElasticPolicy, StaticGangPolicy
 from repro.scheduler.reliability import (
     CheckpointCadence,
@@ -22,6 +23,9 @@ __all__ = [
     "UniformCostModel",
     "FleetExecutor",
     "ManagedJob",
+    "JobTable",
+    "JobView",
+    "TableJob",
     "ElasticPolicy",
     "StaticGangPolicy",
     "CheckpointCadence",

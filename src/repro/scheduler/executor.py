@@ -12,8 +12,9 @@ exercises — the executor adapts its slot capacity to a one-cluster
 ``Fleet`` and mirrors each managed job as a scheduler ``Job`` (the
 workload-scope shadow: arrival order, SLA account, allocation state).
 The shadows' SLA accounts live in the same ``FleetSLAAccounts`` ledger
-the simulator uses, recorded in one batched call per tick, so the policy
-consults identical machinery under both back-ends.  One policy, two
+the simulator uses, recorded in one batched call per tick, and the
+shadows themselves are adopted into the same fleet ``JobTable`` — the
+policy slices identical columns under both back-ends.  One policy, two
 mechanism back-ends; simulated results and real-mechanism results can no
 longer drift apart.
 
@@ -35,6 +36,7 @@ from repro.core.elastic import ElasticRuntime
 from repro.core.migration import checkpoint_job
 from repro.core.sla import FleetSLAAccounts, FleetSlotAccount
 from repro.scheduler.costs import CostModel
+from repro.scheduler.job_table import JobTable, TableJob
 from repro.scheduler.policy import ElasticPolicy
 from repro.scheduler.types import Cluster, Fleet, Job, Region
 
@@ -87,11 +89,15 @@ class FleetExecutor:
         self.cost_model = cost_model or CostModel()
         if hasattr(self.policy, "bind_costs"):
             self.policy.bind_costs(self.cost_model, tick_seconds)
-        # shadow accounts live in a shared fleet ledger, like the simulator's
+        # shadow accounts live in a shared fleet ledger, and the shadows
+        # themselves in a shared JobTable, like the simulator's — one
+        # decide path for both back-ends, column slices included
         self.sla = FleetSLAAccounts()
+        self.table = JobTable(clusters=["local"], sla=self.sla)
         self.fleet = Fleet(
             [Region("local", [Cluster("local", "local", total_slots)])],
             sla=self.sla,
+            jobs=self.table,
         )
         self.tick_seconds = tick_seconds
         self.clock = 0.0
@@ -111,8 +117,10 @@ class FleetExecutor:
         job._cfg, job._tcfg = cfg, tcfg
         job._gb, job._sl = global_batch, seq_len
         self.jobs[job.id] = job
-        # scheduler-facing mirror: demand = logical world, splice floor 1
-        self._shadows[job.id] = Job(
+        # scheduler-facing mirror: demand = logical world, splice floor 1;
+        # adopted into the shared JobTable so the policy's decide path
+        # slices the same columns it would under the simulator
+        shadow = Job(
             id=job.id,
             tier=job.tier,
             demand_gpus=job.world_size,
@@ -121,6 +129,8 @@ class FleetExecutor:
             min_gpus=1,
             account=FleetSlotAccount(self.sla, job.tier, job.world_size),
         )
+        self.table.adopt(shadow)
+        self._shadows[job.id] = shadow
 
     # ------------------------------------------------------------ policy
     def _decide_allocations(self) -> Dict[str, int]:
@@ -275,6 +285,8 @@ class FleetExecutor:
                 shadow.done_at = self.clock
                 shadow.allocated = 0
                 shadow.account.release()
+                if isinstance(shadow, TableJob):
+                    self.table.detach(shadow)  # row freed for reuse
                 self.log.append(
                     {"event": "done", "job": job.id, "steps": job.steps_done}
                 )

@@ -53,10 +53,21 @@ admission/expansion/placement orders, cumsum-based greedy capacity fits,
 and one batched ``FleetSLAAccounts.headroom_all`` call for the SLA state
 of every guaranteed job (no per-job account queries remain on the decide
 path when jobs carry ledger-backed accounts) — so million-job traces
-clear in minutes (``benchmarks/sched_scale.py``).
+clear in minutes (``benchmarks/sched_scale.py``).  When the driver's
+jobs live in a fleet ``JobTable`` (the production setup: the simulator
+and the executor adopt theirs at construction), even the per-job
+*attribute gather* disappears: the decide pass slices the table's
+columns directly, the ledger slots come from the ``sla_slot`` column,
+and the ``Decision`` carries its array form (``table_update``) so the
+simulator applies it with masked column writes.  Hand-built scalar
+``Job`` lists keep the per-job build path; mixed or foreign-table lists
+are detected (``job_table.shared_table``) and fall back the same way
+``_shared_ledger`` does.
 ``ElasticPolicy(vectorized=False)`` keeps a pure-Python reference oracle
 with identical semantics; ``tests/test_policy_equivalence.py`` proves the
-two paths emit byte-identical decisions on random fleets.
+two paths emit byte-identical decisions on random fleets, and
+``tests/test_job_table.py`` proves the table path is indistinguishable
+from plain jobs.
 
 ``StaticGangPolicy`` is the status-quo baseline: jobs are gang-scheduled at
 full demand in FIFO order, never preempted, never resized — the comparison
@@ -65,31 +76,86 @@ that motivates the paper (§1: utilization/idling).
 from __future__ import annotations
 
 import dataclasses
+import time
+from collections.abc import Mapping as MappingABC
 from typing import Dict, List, Mapping, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.core.sla import TIERS, FleetSlotAccount
 from repro.scheduler.costs import CostModel
+from repro.scheduler.job_table import TIER_CODE, JobView, shared_table
 from repro.scheduler.types import Fleet, Job
 
 DEFAULT_INTERVAL_SECONDS = 300.0
 
 # tier attributes as numpy lookup tables: one dict hit per job instead of
-# three TIERS consultations on the decide hot path
-_TIER_CODE = {name: i for i, name in enumerate(TIERS)}
+# three TIERS consultations on the decide hot path (codes shared with the
+# JobTable's tier_code column)
+_TIER_CODE = TIER_CODE
 _TIER_PRIO = np.array([TIERS[t].preempt_priority for t in TIERS], np.int64)
 _TIER_SUP = np.array([TIERS[t].scaleup_priority for t in TIERS], np.int64)
 _TIER_GFRAC = np.array([TIERS[t].gpu_fraction for t in TIERS], np.float64)
+
+
+class _TableAlloc(MappingABC):
+    """``Decision.alloc`` backed by the decide pass's arrays.
+
+    The simulator's table-aware ``_apply`` consumes the array form
+    directly, so for table-backed fleets the per-job ``{id: (gpus,
+    cluster)}`` dict never needs to exist; it materializes lazily (and
+    identically) for anyone who reads the mapping — digest wrappers,
+    the executor, hand-written consumers."""
+
+    __slots__ = ("_ids", "_gpus", "_placed", "_cluster_ids", "_dict")
+
+    def __init__(self, ids, gpus, placed, cluster_ids):
+        self._ids = ids
+        self._gpus = gpus
+        self._placed = placed
+        self._cluster_ids = cluster_ids
+        self._dict: Optional[Dict[str, Tuple[int, Optional[str]]]] = None
+
+    def _materialize(self) -> Dict[str, Tuple[int, Optional[str]]]:
+        if self._dict is None:
+            cids = self._cluster_ids
+            placed = self._placed
+            gpus = self._gpus
+            self._dict = {
+                jid: (
+                    int(gpus[i]),
+                    cids[placed[i]] if placed[i] >= 0 else None,
+                )
+                for i, jid in enumerate(self._ids)
+            }
+        return self._dict
+
+    def __getitem__(self, key):
+        return self._materialize()[key]
+
+    def __iter__(self):
+        return iter(self._materialize())
+
+    def __len__(self) -> int:
+        return len(self._ids)
+
+    def items(self):
+        return self._materialize().items()
 
 
 @dataclasses.dataclass
 class Decision:
     """Target allocation for the next interval: job -> (gpus, cluster)."""
 
-    alloc: Dict[str, Tuple[int, Optional[str]]]
+    alloc: Mapping[str, Tuple[int, Optional[str]]]
     preemptions: List[str]
     migrations: List[str]
+    # array form of ``alloc`` when the decide pass ran over a JobTable
+    # whose cluster codes index ``fleet.clusters()``: ``(table, slots,
+    # gpus, placed)`` with ``placed`` a cluster index (-1 = unplaced).
+    # The simulator applies it with masked column writes instead of a
+    # per-job Python loop; consumers that only know the mapping ignore it.
+    table_update: Optional[tuple] = None
 
 
 class StaticGangPolicy:
@@ -220,6 +286,10 @@ class ElasticPolicy:
         self.aging_threshold_intervals = aging_threshold_intervals
         self._bound_cost = False
         self._bound_interval = False
+        # wall seconds spent gathering per-job state into arrays inside
+        # _decide_vectorized (the base-array build, or the JobTable
+        # column slicing that replaces it); benchmarks report the split
+        self.gather_seconds = 0.0
 
     def bind_costs(self, cost_model: CostModel, interval_hint: float) -> None:
         """Thread the driver's charged cost model and tick length into
@@ -282,6 +352,18 @@ class ElasticPolicy:
         return 0.0
 
     def decide(self, now: float, jobs: List[Job], fleet: Fleet) -> Decision:
+        if isinstance(jobs, JobView):
+            # table-backed fast path: the active filter is a masked
+            # column read, no per-job Python at all
+            t, s = jobs.table, jobs.slots
+            keep = np.isnan(t.done_at[s]) & (t.arrival[s] <= now)
+            if not keep.all():
+                s = s[keep]
+            if s.size == 0:
+                return Decision(alloc={}, preemptions=[], migrations=[])
+            if self.vectorized:
+                return self._decide_vectorized(now, JobView(t, s), fleet)
+            return self._decide_reference(now, list(JobView(t, s)), fleet)
         active = [j for j in jobs if j.done_at is None and j.arrival <= now]
         if not active:
             return Decision(alloc={}, preemptions=[], migrations=[])
@@ -296,31 +378,52 @@ class ElasticPolicy:
         n = len(active)
         interval = self._interval()
         cm = self.cost_model
-        # one pass over the job objects: all numeric state in a single
-        # (n, 8) array (exact in float64 — GPU counts and byte sizes are
-        # far below 2**53), tier attributes via code lookup tables
-        base = np.array(
-            [
-                (
-                    j.demand_gpus,
-                    j.min_gpus,
-                    j.allocated,
-                    j.arrival,
-                    j.checkpoint_bytes,
-                    j.restore_debt,
-                    _TIER_CODE[j.tier],
-                    j.queued_since,
-                )
-                for j in active
-            ],
-            dtype=np.float64,
-        ).reshape(n, 8)
-        demand = base[:, 0].astype(np.int64)
-        min_g = base[:, 1].astype(np.int64)
-        alloc0 = base[:, 2].astype(np.int64)
-        arrival = base[:, 3]
-        tcode = base[:, 6].astype(np.int64)
-        qsince = base[:, 7]
+        # gather every job's numeric state into arrays.  Table-backed
+        # jobs (the production setup): column slices straight out of the
+        # shared JobTable, zero per-job Python.  Hand-built scalar jobs:
+        # one pass over the objects into a single (n, 8) float64 array
+        # (exact — GPU counts and byte sizes are far below 2**53), tier
+        # attributes via code lookup tables.  Mixed or foreign-table
+        # lists fall back to the object path, like _shared_ledger.
+        t_gather = time.perf_counter()
+        table, slots = shared_table(active)
+        if table is not None:
+            demand = table.demand_gpus[slots]
+            min_g = table.min_gpus[slots]
+            alloc0 = table.allocated[slots]
+            arrival = table.arrival[slots]
+            tcode = table.tier_code[slots]
+            qsince = table.queued_since[slots]
+            cb = table.checkpoint_bytes[slots].astype(np.float64)
+            debt = table.restore_debt[slots]
+            ran = table.ever_ran[slots]
+        else:
+            base = np.array(
+                [
+                    (
+                        j.demand_gpus,
+                        j.min_gpus,
+                        j.allocated,
+                        j.arrival,
+                        j.checkpoint_bytes,
+                        j.restore_debt,
+                        _TIER_CODE[j.tier],
+                        j.queued_since,
+                    )
+                    for j in active
+                ],
+                dtype=np.float64,
+            ).reshape(n, 8)
+            demand = base[:, 0].astype(np.int64)
+            min_g = base[:, 1].astype(np.int64)
+            alloc0 = base[:, 2].astype(np.int64)
+            arrival = base[:, 3]
+            tcode = base[:, 6].astype(np.int64)
+            qsince = base[:, 7]
+            cb = base[:, 4]
+            debt = base[:, 5]
+            ran = None  # gathered lazily, only when a cost model needs it
+        self.gather_seconds += time.perf_counter() - t_gather
         prio = _TIER_PRIO[tcode]
         sup = _TIER_SUP[tcode]
         gfrac = _TIER_GFRAC[tcode]
@@ -328,18 +431,29 @@ class ElasticPolicy:
         guar = gfrac > 0.0
 
         # SLA headroom: ONE batched ledger query when the guaranteed jobs
-        # carry FleetSLAAccounts-backed accounts (the production setup);
+        # carry FleetSLAAccounts-backed accounts (the production setup —
+        # table-adopted accounts mirror their ledger slots into the
+        # sla_slot column, so not even the account objects are touched);
         # hand-built jobs with scalar accounts fall back to the oracle loop
         head = np.full(n, np.inf)
         gidx = np.flatnonzero(guar)
         if gidx.size:
-            gaccs = [active[i].account for i in gidx]
-            ledger, slots = _shared_ledger(gaccs)
-            if ledger is not None:
-                head[gidx] = ledger.headroom_all(now, slots, gfrac[gidx])
+            if (
+                table is not None
+                and table.sla is not None
+                and bool(table.sla_view[slots[gidx]].all())
+            ):
+                head[gidx] = table.sla.headroom_all(
+                    now, table.sla_slot[slots[gidx]], gfrac[gidx]
+                )
             else:
-                for k, i in enumerate(gidx):
-                    head[i] = gaccs[k].headroom(now)
+                gaccs = [active[i].account for i in gidx]
+                ledger, lslots = _shared_ledger(gaccs)
+                if ledger is not None:
+                    head[gidx] = ledger.headroom_all(now, lslots, gfrac[gidx])
+                else:
+                    for k, i in enumerate(gidx):
+                        head[i] = gaccs[k].headroom(now)
         shrunk = np.maximum(
             min_g, (demand * np.minimum(1.0, gfrac + 0.1)).astype(np.int64)
         )
@@ -350,8 +464,8 @@ class ElasticPolicy:
             restart = np.zeros(n)
             resize_s = np.zeros(n)
         else:
-            cb = base[:, 4]
-            debt = base[:, 5]
+            if ran is None:
+                ran = np.fromiter((j.ever_ran for j in active), bool, n)
             pre_s = np.broadcast_to(
                 np.asarray(cm.preempt_seconds(cb), np.float64), (n,)
             )
@@ -365,11 +479,7 @@ class ElasticPolicy:
             restart = np.where(
                 running,
                 resize_s,
-                np.where(
-                    np.fromiter((j.ever_ran for j in active), bool, n),
-                    rest_s + debt,
-                    0.0,
-                ),
+                np.where(ran, rest_s + debt, 0.0),
             )
 
         idx = np.arange(n)
@@ -451,23 +561,39 @@ class ElasticPolicy:
 
         # 5. placement
         galloc, placed, preempt, migrate = self._place_vectorized(
-            active, fleet, galloc, min_g, prio, running, preempt
+            active, table, slots, fleet, galloc, min_g, prio, running, preempt
         )
 
         clusters = fleet.clusters()
+        if table is not None:
+            ids = table.ids[slots]
+            cluster_ids = [c.id for c in clusters]
+            return Decision(
+                alloc=_TableAlloc(ids, galloc, placed, cluster_ids),
+                preemptions=sorted(ids[i] for i in np.flatnonzero(preempt)),
+                migrations=sorted(ids[i] for i in np.flatnonzero(migrate)),
+                table_update=(
+                    (table, slots, galloc, placed)
+                    if table.matches_clusters(cluster_ids)
+                    else None
+                ),
+            )
+        ids = [j.id for j in active]
         final: Dict[str, Tuple[int, Optional[str]]] = {}
-        for i, j in enumerate(active):
+        for i in range(n):
             cid = clusters[placed[i]].id if placed[i] >= 0 else None
-            final[j.id] = (int(galloc[i]), cid)
+            final[ids[i]] = (int(galloc[i]), cid)
         return Decision(
             alloc=final,
-            preemptions=sorted(active[i].id for i in np.flatnonzero(preempt)),
-            migrations=sorted(active[i].id for i in np.flatnonzero(migrate)),
+            preemptions=sorted(ids[i] for i in np.flatnonzero(preempt)),
+            migrations=sorted(ids[i] for i in np.flatnonzero(migrate)),
         )
 
     def _place_vectorized(
         self,
         active: List[Job],
+        table,
+        slots: Optional[np.ndarray],
         fleet: Fleet,
         galloc: np.ndarray,
         min_g: np.ndarray,
@@ -491,8 +617,18 @@ class ElasticPolicy:
             np.int64,
             len(clusters),
         )
-        jcl = np.fromiter((cid_index.get(j.cluster, -1) for j in active), np.int64, n)
-        has_cluster = np.fromiter((j.cluster is not None for j in active), bool, n)
+        if table is not None and table.matches_clusters(cid_index):
+            # table cluster codes below len(clusters) index fleet.clusters()
+            # directly; codes past it are clusters this fleet doesn't know
+            # (same as the object path's cid_index miss -> -1)
+            raw = table.cluster_idx[slots]
+            has_cluster = raw >= 0
+            jcl = np.where(raw < len(clusters), raw, -1)
+        else:
+            jcl = np.fromiter(
+                (cid_index.get(j.cluster, -1) for j in active), np.int64, n
+            )
+            has_cluster = np.fromiter((j.cluster is not None for j in active), bool, n)
         jreg = np.where(jcl >= 0, creg[np.maximum(jcl, 0)], -1)
         free = np.fromiter((c.capacity() for c in clusters), np.int64, len(clusters))
         drain = np.fromiter((c.draining for c in clusters), bool, len(clusters))

@@ -34,10 +34,18 @@ numpy over an arrival-sorted active window, and SLA delivery is recorded
 into the fleet-wide ``FleetSLAAccounts`` ledger in two batched calls per
 tick (the simulator swaps each job's scalar account for a ledger-backed
 view at construction; ``SimConfig(sla_ledger=False)`` keeps per-job
-scalar accounts for benchmarking the difference).  50k–100k-job traces
-run in seconds.  ``SimConfig(vectorized=False)`` keeps the seed's
-O(jobs) per-event Python loop for apples-to-apples throughput
-comparisons (``benchmarks/sched_scale.py``).
+scalar accounts for benchmarking the difference).  Per-job *state* lives
+in a fleet ``JobTable`` the same way: the trace is adopted into shared
+numpy columns at construction (slot == job index), each ``Job`` becomes
+a thin ``TableJob`` view, and the loop advances the very columns the
+policy slices and ``_apply`` writes — no re-materialized arrays, no
+post-decide resync loops, completions detach in batches and free their
+rows.  ``SimConfig(job_table=False)`` keeps plain scalar jobs; the two
+configurations are property-tested indistinguishable
+(``tests/test_job_table.py``).  50k–100k-job traces run in seconds.
+``SimConfig(vectorized=False)`` keeps the seed's O(jobs) per-event
+Python loop for apples-to-apples throughput comparisons
+(``benchmarks/sched_scale.py``).
 """
 from __future__ import annotations
 
@@ -49,9 +57,13 @@ import numpy as np
 
 from repro.core.sla import TIERS, FleetSLAAccounts, FleetSlotAccount, GpuFractionAccount
 from repro.scheduler.costs import CostModel, RegionTopology
+from repro.scheduler.job_table import JobTable, TableJob
 from repro.scheduler.policy import Decision
 from repro.scheduler.reliability import CheckpointCadence, FailureModel, FailureTrace
 from repro.scheduler.types import Cluster, Fleet, Job, Region
+
+# tier gpu_fraction lookup by JobTable tier code (same enumeration order)
+_TIER_GFRAC = np.array([TIERS[t].gpu_fraction for t in TIERS], np.float64)
 
 
 @dataclasses.dataclass
@@ -71,6 +83,10 @@ class SimConfig:
     # False = keep per-job scalar GpuFractionAccounts (the PR 2 baseline)
     # instead of the batched FleetSLAAccounts ledger
     sla_ledger: bool = True
+    # False = keep plain scalar Job objects (the PR 3/4 baseline): the
+    # policy's decide path gathers per-job attributes in Python instead
+    # of slicing the fleet JobTable's columns
+    job_table: bool = True
     # reliability: a replayable FailureTrace (or a FailureModel, sampled
     # over this fleet/horizon at construction) injects unplanned failures;
     # a CheckpointCadence adds periodic snapshots so a failure loses only
@@ -261,6 +277,26 @@ class FleetSimulator:
                 ):
                     j.account = FleetSlotAccount(fleet.sla, j.tier, j.demand_gpus)
         self._ledger = fleet.sla if self.cfg.sla_ledger else None
+        # job-state SoA: adopt the trace into a fresh fleet JobTable so
+        # the decide path reads column slices (zero per-job gathering),
+        # the event loop advances the same columns _apply writes (no
+        # resync loops) and completed jobs release their rows.  Slots are
+        # registered in job order into a fresh table, so slot == index in
+        # self._jobs_list — the vectorized loop indexes columns directly.
+        # A trace containing jobs already adopted elsewhere (foreign
+        # TableJobs) keeps the object path end to end.
+        self._table: Optional[JobTable] = None
+        if self.cfg.job_table and all(type(j) is Job for j in self._jobs_list):
+            table = JobTable(
+                clusters=[c.id for c in fleet.clusters()],
+                sla=self._ledger,
+                capacity=max(1, len(self._jobs_list)),
+            )
+            table.adopt_batch(self._jobs_list)
+            self._table = table
+            # the fleet's table handle always points at the CURRENT
+            # driver's table (a reused Fleet must not keep a stale one)
+            fleet.jobs = table
         self.now = 0.0
         self.preemptions = 0
         self.migrations = 0
@@ -317,6 +353,7 @@ class FleetSimulator:
         self._has_failures = bool(self._fails)
         self._reliability = self._has_failures or self.cfg.cadence is not None
         self._tau: Optional[np.ndarray] = None
+        self._snap_cost: Optional[np.ndarray] = None
         if self.cfg.cadence is not None and self._jobs_list:
             clusters = fleet.clusters()
             gpn = clusters[0].gpus_per_node if clusters else 8
@@ -330,6 +367,20 @@ class FleetSimulator:
                     np.float64,
                 )
             )
+            if self._table is not None:
+                # per-job snapshot charge, precomputed for the masked
+                # vector cadence update (same arithmetic as the scalar
+                # per-job _charge path, element for element)
+                n = len(self._jobs_list)
+                self._snap_cost = np.broadcast_to(
+                    np.asarray(
+                        self.costs.snapshot_seconds(
+                            self._table.checkpoint_bytes[:n].astype(np.float64)
+                        ),
+                        np.float64,
+                    ),
+                    (n,),
+                ).copy()
 
     # -- cost charging ---------------------------------------------------------
     def _charge(self, j: Job, seconds: float) -> None:
@@ -451,89 +502,48 @@ class FleetSimulator:
             changed.append(j)
         return changed
 
+    def _cadence_snapshots_vec(self, act: np.ndarray) -> None:
+        """The scalar ``_cadence_snapshots`` sweep as one masked update
+        over the JobTable's columns: same due rule, same charge
+        arithmetic (zero-cost snapshots skip the downtime write exactly
+        like ``_charge``), snapshot-for-snapshot identical —
+        ``tests/test_reliability.py`` pins the equivalence."""
+        if self._tau is None or act.size == 0:
+            return
+        now = self.now
+        t = self._table
+        run = act[t.allocated[act] > 0]
+        due = run[now - t.snap_time[run] >= self._tau[run] - 1e-9]
+        if due.size == 0:
+            return
+        t.snap_progress[due] = t.progress[due]
+        t.snap_time[due] = now
+        cost = self._snap_cost[due]
+        pos = cost > 0
+        if pos.any():
+            dp = due[pos]
+            t.downtime_until[dp] = np.maximum(t.downtime_until[dp], now) + cost[pos]
+            t.downtime_seconds[dp] += cost[pos]
+        self.snapshots += int(due.size)
+
     # -- decision application (shared by both event loops) ---------------------
     def _apply(self, decision: Decision) -> None:
         """Apply one scheduling decision, classifying each job transition
-        into exactly ONE event and charging its cost model downtime."""
-        for jid, (gpus, cluster) in decision.alloc.items():
-            j = self.jobs[jid]
-            if j.done_at is not None:
-                continue
-            prev_g = j.allocated
-            if prev_g > 0 and gpus == 0:
-                # preemption: quiesce + dump + upload.  Work-conserving —
-                # the cost is carried as debt and delays the next restore.
-                # The graceful checkpoint is a durable snapshot: a later
-                # failure can only claw back work past this point.
-                j.preemptions += 1
-                self.preemptions += 1
-                j.restore_debt += self.costs.preempt_seconds(j.checkpoint_bytes)
-                j.queued_since = self.now  # fairness aging restarts here
-                if self._reliability:
-                    j.snap_progress = j.progress
-                    j.snap_time = self.now
-            elif prev_g == 0 and gpus > 0:
-                # (re)start.  First admission is free; a restore pays
-                # download + rendezvous + the carried preempt debt.  A
-                # restore onto a different cluster is still one restore —
-                # but its download leg is priced by the (checkpoint
-                # region, destination region) pair, like a migration's.
-                if j.ever_ran:
-                    self.restores += 1
-                    src = self.fleet.region_of(j.cluster)
-                    dst = self.fleet.region_of(cluster) if cluster is not None else src
-                    if src is not None and dst is not None and src != dst:
-                        self.restores_cross_region += 1
-                    self._charge(
-                        j,
-                        j.restore_debt
-                        + self.costs.restore_seconds(j.checkpoint_bytes, src, dst),
-                    )
-                    j.restore_debt = 0.0
-                    if j.failed_at is not None:
-                        # restart after an unplanned failure: ETTR sample
-                        cause = "failure"
-                        self._ettr_sum[j.tier] += self.now - j.failed_at
-                        self._ettr_n[j.tier] += 1
-                        j.failed_at = None
-                    else:
-                        cause = "preempt"
-                    if self._reliability:
-                        self.restarts_by_cause[cause] = (
-                            self.restarts_by_cause.get(cause, 0) + 1
-                        )
-            elif (
-                gpus > 0
-                and cluster is not None
-                and j.cluster is not None
-                and cluster != j.cluster
-            ):
-                # live migration (possibly with a simultaneous resize —
-                # still one event, one Table-5 round trip); the transfer
-                # leg is priced by the (source, destination) region pair.
-                # The round trip checkpoints state: snapshot refreshes.
-                j.migrations += 1
-                self.migrations += 1
-                src = self.fleet.region_of(j.cluster)
-                dst = self.fleet.region_of(cluster)
-                if src is not None and dst is not None and src != dst:
-                    self.migrations_cross_region += 1
-                self._charge(
-                    j, self.costs.migrate_seconds(j.checkpoint_bytes, src, dst)
-                )
-                if self._reliability:
-                    j.snap_progress = j.progress
-                    j.snap_time = self.now
-            elif gpus > 0 and gpus != prev_g:
-                # in-place transparent resize (splice swap)
-                j.resizes += 1
-                self.resizes += 1
-                self._charge(j, self.costs.resize_seconds(j.checkpoint_bytes))
-            j.allocated = gpus
-            if gpus > 0:
-                j.ever_ran = True
-            if cluster is not None:
-                j.cluster = cluster
+        into exactly ONE event and charging its cost model downtime.
+
+        Decisions carrying our JobTable's array form take the masked
+        fast path: only jobs with an actual event (preempt / charged
+        restore / migrate / resize — a small subset of the fleet) go
+        through the per-job classifier; everyone else is updated with a
+        few column writes.  Foreign or hand-built decisions walk the
+        mapping per job as before."""
+        tu = decision.table_update
+        fast = tu is not None and self._table is not None and tu[0] is self._table
+        if fast:
+            self._apply_table(tu[1], tu[2], tu[3])
+        else:
+            for jid, (gpus, cluster) in decision.alloc.items():
+                self._apply_one(self.jobs[jid], gpus, cluster)
         for jid in decision.preemptions:
             # victims the policy listed without a zeroed alloc entry
             j = self.jobs[jid]
@@ -546,8 +556,126 @@ class FleetSimulator:
                 if self._reliability:
                     j.snap_progress = j.progress
                     j.snap_time = self.now
-        if self.cfg.validate:
+        if self.cfg.validate and not fast:
             self._check_capacity(decision)
+
+    def _apply_table(
+        self, slots: np.ndarray, gpus: np.ndarray, placed: np.ndarray
+    ) -> None:
+        """Masked-column form of the per-job apply loop.  Event
+        classification uses the same predicates as ``_apply_one``'s
+        branch chain (cluster codes index ``fleet.clusters()``, which
+        ``Decision.table_update`` guarantees); classified jobs run the
+        identical scalar body, so charges and counters cannot drift."""
+        t = self._table
+        alive = np.isnan(t.done_at[slots])
+        if not alive.all():
+            slots, gpus, placed = slots[alive], gpus[alive], placed[alive]
+        prev = t.allocated[slots]
+        prev_c = t.cluster_idx[slots]
+        run_on = (prev > 0) & (gpus > 0)
+        event = (
+            ((prev > 0) & (gpus == 0))  # preemption
+            | ((prev == 0) & (gpus > 0) & t.ever_ran[slots])  # charged restore
+            | (run_on & (placed >= 0) & (prev_c >= 0) & (placed != prev_c))
+            | (run_on & (gpus != prev))  # migrate / resize
+        )
+        eidx = np.flatnonzero(event)
+        if eidx.size:
+            clusters = self.fleet.clusters()
+            objs = t.objs
+            for i in eidx:
+                cid = clusters[placed[i]].id if placed[i] >= 0 else None
+                self._apply_one(objs[slots[i]], int(gpus[i]), cid)
+        rest = np.flatnonzero(~event)
+        rs = slots[rest]
+        g = gpus[rest]
+        t.allocated[rs] = g
+        t.ever_ran[rs] |= g > 0
+        pl = placed[rest]
+        hasc = pl >= 0
+        t.cluster_idx[rs[hasc]] = pl[hasc]
+        if self.cfg.validate:
+            self._check_capacity_table(slots, gpus, placed)
+
+    def _apply_one(self, j: Job, gpus: int, cluster: Optional[str]) -> None:
+        if j.done_at is not None:
+            return
+        prev_g = j.allocated
+        if prev_g > 0 and gpus == 0:
+            # preemption: quiesce + dump + upload.  Work-conserving —
+            # the cost is carried as debt and delays the next restore.
+            # The graceful checkpoint is a durable snapshot: a later
+            # failure can only claw back work past this point.
+            j.preemptions += 1
+            self.preemptions += 1
+            j.restore_debt += self.costs.preempt_seconds(j.checkpoint_bytes)
+            j.queued_since = self.now  # fairness aging restarts here
+            if self._reliability:
+                j.snap_progress = j.progress
+                j.snap_time = self.now
+        elif prev_g == 0 and gpus > 0:
+            # (re)start.  First admission is free; a restore pays
+            # download + rendezvous + the carried preempt debt.  A
+            # restore onto a different cluster is still one restore —
+            # but its download leg is priced by the (checkpoint
+            # region, destination region) pair, like a migration's.
+            if j.ever_ran:
+                self.restores += 1
+                src = self.fleet.region_of(j.cluster)
+                dst = self.fleet.region_of(cluster) if cluster is not None else src
+                if src is not None and dst is not None and src != dst:
+                    self.restores_cross_region += 1
+                self._charge(
+                    j,
+                    j.restore_debt
+                    + self.costs.restore_seconds(j.checkpoint_bytes, src, dst),
+                )
+                j.restore_debt = 0.0
+                if j.failed_at is not None:
+                    # restart after an unplanned failure: ETTR sample
+                    cause = "failure"
+                    self._ettr_sum[j.tier] += self.now - j.failed_at
+                    self._ettr_n[j.tier] += 1
+                    j.failed_at = None
+                else:
+                    cause = "preempt"
+                if self._reliability:
+                    self.restarts_by_cause[cause] = (
+                        self.restarts_by_cause.get(cause, 0) + 1
+                    )
+        elif (
+            gpus > 0
+            and cluster is not None
+            and j.cluster is not None
+            and cluster != j.cluster
+        ):
+            # live migration (possibly with a simultaneous resize —
+            # still one event, one Table-5 round trip); the transfer
+            # leg is priced by the (source, destination) region pair.
+            # The round trip checkpoints state: snapshot refreshes.
+            j.migrations += 1
+            self.migrations += 1
+            src = self.fleet.region_of(j.cluster)
+            dst = self.fleet.region_of(cluster)
+            if src is not None and dst is not None and src != dst:
+                self.migrations_cross_region += 1
+            self._charge(
+                j, self.costs.migrate_seconds(j.checkpoint_bytes, src, dst)
+            )
+            if self._reliability:
+                j.snap_progress = j.progress
+                j.snap_time = self.now
+        elif gpus > 0 and gpus != prev_g:
+            # in-place transparent resize (splice swap)
+            j.resizes += 1
+            self.resizes += 1
+            self._charge(j, self.costs.resize_seconds(j.checkpoint_bytes))
+        j.allocated = gpus
+        if gpus > 0:
+            j.ever_ran = True
+        if cluster is not None:
+            j.cluster = cluster
 
     def _check_capacity(self, decision: Decision) -> None:
         """Fleet-capacity conservation: no decision may over-allocate any
@@ -567,6 +695,29 @@ class FleetSimulator:
         for c, u in used.items():
             healthy = self._cluster_by_id[c].capacity()
             assert u <= healthy, f"cluster {c} over-allocated: {u} > {healthy}"
+
+    def _check_capacity_table(
+        self, slots: np.ndarray, gpus: np.ndarray, placed: np.ndarray
+    ) -> None:
+        """``_check_capacity`` over the decision's array form: one
+        bincount instead of a per-job dict walk (done jobs were already
+        filtered by ``_apply_table``)."""
+        live = gpus > 0
+        total = int(gpus[live].sum())
+        cap = self.fleet.capacity()
+        assert total <= cap, f"fleet over-allocated: {total} > {cap}"
+        pl = placed[live]
+        hasc = pl >= 0
+        if not hasc.any():
+            return
+        clusters = self.fleet.clusters()
+        used = np.bincount(pl[hasc], weights=gpus[live][hasc], minlength=len(clusters))
+        healthy = np.fromiter((c.capacity() for c in clusters), np.int64, len(clusters))
+        over = np.flatnonzero(used > healthy)
+        assert over.size == 0, (
+            f"cluster {clusters[over[0]].id} over-allocated: "
+            f"{used[over[0]]:.0f} > {healthy[over[0]]}"
+        )
 
     # ==================== legacy (seed) event loop ============================
     # O(jobs) Python scan per event; kept as the measured baseline for
@@ -593,6 +744,8 @@ class FleetSimulator:
                         j.done_at = end
                         j.allocated = 0
                         _release_account(j)
+                        if isinstance(j, TableJob):
+                            j._table.detach(j)
             else:
                 self.queue_seconds += dt
         self.now = end
@@ -625,14 +778,30 @@ class FleetSimulator:
     def _build_arrays(self) -> None:
         jobs = self._jobs_list
         n = len(jobs)
-        self._arrival = np.array([j.arrival for j in jobs])
-        self._demand = np.array([float(j.demand_gpus) for j in jobs])
-        self._ideal = np.array([j.ideal_seconds for j in jobs])
-        self._ovh = np.array([j.splice_overhead for j in jobs])
-        self._guar = np.array([TIERS[j.tier].gpu_fraction > 0 for j in jobs])
-        self._progress = np.zeros(n)
-        self._alloc = np.zeros(n)
-        self._downtime_until = np.zeros(n)
+        if self._table is not None:
+            # the JobTable IS the storage (slot == index): the loop
+            # advances the very columns the policy slices and _apply's
+            # property writes land in, so nothing is re-materialized
+            # from the job objects and nothing needs resyncing.
+            t = self._table
+            t.pinned = True  # growth would decouple the bound views
+            self._arrival = t.arrival
+            self._demand = t.demand_gpus
+            self._ideal = t.ideal
+            self._ovh = t.splice_overhead
+            self._guar = _TIER_GFRAC[t.tier_code[:n]] > 0
+            self._progress = t.progress
+            self._alloc = t.allocated
+            self._downtime_until = t.downtime_until
+        else:
+            self._arrival = np.array([j.arrival for j in jobs])
+            self._demand = np.array([float(j.demand_gpus) for j in jobs])
+            self._ideal = np.array([j.ideal_seconds for j in jobs])
+            self._ovh = np.array([j.splice_overhead for j in jobs])
+            self._guar = np.array([TIERS[j.tier].gpu_fraction > 0 for j in jobs])
+            self._progress = np.zeros(n)
+            self._alloc = np.zeros(n)
+            self._downtime_until = np.zeros(n)
         self._done = np.zeros(n, dtype=bool)
         # ledger plumbing: which jobs carry a view on OUR ledger (others
         # — foreign views or history-carrying scalar accounts — record
@@ -650,8 +819,9 @@ class FleetSimulator:
         else:
             self._is_view = np.zeros(n, dtype=bool)
         self._slot = np.full(n, -1, np.int64)
-        # precomputed arrival-sorted activation order
-        self._arr_order = np.argsort(self._arrival, kind="stable")
+        # precomputed arrival-sorted activation order (fancy indexing
+        # copies, so later slot resets cannot disturb activation)
+        self._arr_order = np.argsort(self._arrival[:n], kind="stable")
         self._arr_sorted = self._arrival[self._arr_order]
 
     def _advance_vec(self, act: np.ndarray, dt: float) -> None:
@@ -707,12 +877,22 @@ class FleetSimulator:
         done_now = act[(prog >= 1.0 - 1e-12) & running]
         if done_now.size:
             self._done[done_now] = True
-            self._alloc[done_now] = 0.0
-            for i in done_now:
-                jobs[i].progress = 1.0
-                jobs[i].done_at = t1
-                jobs[i].allocated = 0
-                _release_account(jobs[i])
+            self._alloc[done_now] = 0
+            if self._table is not None:
+                # release-on-completion: final state is written to the
+                # columns, then the tick's finishers detach in one batch
+                # (state copied back to the instances, rows freed)
+                self._progress[done_now] = 1.0
+                self._table.done_at[done_now] = t1
+                for i in done_now:
+                    _release_account(jobs[i])
+                self._table.detach_batch(done_now)
+            else:
+                for i in done_now:
+                    jobs[i].progress = 1.0
+                    jobs[i].done_at = t1
+                    jobs[i].allocated = 0
+                    _release_account(jobs[i])
 
     def _run_vectorized_loop(self) -> None:
         cfg = self.cfg
@@ -738,27 +918,44 @@ class FleetSimulator:
             if ptr >= n and act.size == 0:
                 break
             if act.size:
-                active_jobs = [jobs[i] for i in act]
-                if self._reliability:
-                    # failures/cadence read and mutate per-job progress:
-                    # sync the arrays out, tick reliability, sync back
-                    for i in act:
-                        jobs[i].progress = float(self._progress[i])
-                    for j in self._tick_reliability(active_jobs):
-                        i = self._index[j.id]
-                        self._alloc[i] = j.allocated
-                        self._progress[i] = j.progress
-                        self._downtime_until[i] = j.downtime_until
+                if self._table is not None:
+                    # zero-gather decide path: the policy slices the
+                    # table's columns at these slots, _apply's property
+                    # writes land in the same columns — no job-object
+                    # walks, no resync, and reliability mutates live
+                    # state through the views
+                    active_jobs = self._table.view(act)
+                    if self._reliability:
+                        if self._has_failures:
+                            self._process_failures(active_jobs)
+                        if self.cfg.cadence is not None:
+                            self._cadence_snapshots_vec(act)
+                else:
+                    active_jobs = [jobs[i] for i in act]
+                    if self._reliability:
+                        # failures/cadence read and mutate per-job
+                        # progress: sync the arrays out, tick
+                        # reliability, sync back
+                        for i in act:
+                            jobs[i].progress = float(self._progress[i])
+                        for j in self._tick_reliability(active_jobs):
+                            i = self._index[j.id]
+                            self._alloc[i] = j.allocated
+                            self._progress[i] = j.progress
+                            self._downtime_until[i] = j.downtime_until
                 decision = self.policy.decide(t, active_jobs, self.fleet)
                 self._apply(decision)
-                for i in act:
-                    self._alloc[i] = jobs[i].allocated
-                    self._downtime_until[i] = jobs[i].downtime_until
+                if self._table is None:
+                    for i in act:
+                        self._alloc[i] = jobs[i].allocated
+                        self._downtime_until[i] = jobs[i].downtime_until
             t += cfg.tick_seconds
-        # final sync for jobs still in flight at the horizon
-        for i in range(n):
-            if not self._done[i]:
-                jobs[i].progress = float(self._progress[i])
+        # final sync for jobs still in flight at the horizon (table-backed
+        # jobs read the live columns; nothing to sync)
+        if self._table is None:
+            for i in range(n):
+                if not self._done[i]:
+                    jobs[i].progress = float(self._progress[i])
 
     # ==========================================================================
 

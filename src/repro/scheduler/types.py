@@ -2,10 +2,13 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import TYPE_CHECKING, List, Optional
 
 from repro.core.sla import TIERS, FleetSLAAccounts, GpuFractionAccount, SLAAccount
 from repro.scheduler.costs import RegionTopology, default_checkpoint_bytes
+
+if TYPE_CHECKING:  # avoid the import cycle: job_table views Job
+    from repro.scheduler.job_table import JobTable
 
 
 @dataclasses.dataclass
@@ -58,13 +61,15 @@ class Region:
 class Fleet:
     """The global scheduler's world model: regions of clusters plus the
     inter-region transfer topology the cost model prices migrations
-    against (``None`` = region-blind, every pair at blob bandwidth) and
-    the shared SLA ledger all active jobs' accounts live in (``None`` =
-    per-job scalar accounts)."""
+    against (``None`` = region-blind, every pair at blob bandwidth), the
+    shared SLA ledger all active jobs' accounts live in (``None`` =
+    per-job scalar accounts), and the shared ``JobTable`` the driver's
+    jobs are adopted into (``None`` = plain scalar ``Job`` objects)."""
 
     regions: List[Region]
     topology: Optional[RegionTopology] = None
     sla: Optional[FleetSLAAccounts] = None
+    jobs: Optional["JobTable"] = None
 
     def total(self) -> int:
         return sum(r.total() for r in self.regions)

@@ -45,3 +45,49 @@ def test_shrink_before_preempt():
     assert std.allocated == 2 and std.resizes == 1      # shrunk, not killed
     ex.run(max_ticks=30)
     assert std.done and std.steps_done == 6
+
+
+def test_executor_shadows_live_in_job_table_and_resets_propagate():
+    """The executor's shadow jobs are JobTable views on the same table
+    the policy slices: a REAL preemption must reset the shadow's
+    ``queued_since`` (fairness aging clock) and carry the restore debt
+    through the table columns, an injected failure must roll the shadow
+    back through the view, and completion must detach it and free the
+    row for reuse."""
+    from repro.scheduler.job_table import TableJob
+
+    ex = FleetExecutor(total_slots=2)
+    ex.submit(ManagedJob(id="job", tier="standard", arch="mamba2-130m",
+                         world_size=2, total_steps=8))
+    shadow = ex._shadows["job"]
+    assert isinstance(shadow, TableJob)
+    assert shadow._table is ex.table and ex.table.slots_in_use == 1
+    ex.tick(); ex.tick()
+
+    # REAL preemption resets the aging clock and books restore debt —
+    # written through the view, visible in the columns the policy reads
+    ex.submit(ManagedJob(id="prem", tier="premium", arch="mamba2-130m",
+                         world_size=2, total_steps=2))
+    ex.tick()
+    assert ex.jobs["job"].allocated == 0
+    assert shadow.queued_since == ex.clock - ex.tick_seconds  # reset at preempt
+    assert shadow.restore_debt > 0.0
+    assert float(ex.table.queued_since[shadow._slot]) == shadow.queued_since
+    assert float(ex.table.restore_debt[shadow._slot]) == shadow.restore_debt
+
+    # unplanned failure: rollback + failure bookkeeping through the view
+    for _ in range(10):
+        ex.tick()
+        if ex.jobs["job"].allocated > 0 and not ex.jobs["job"].done:
+            break
+    ex.inject_failure("job")
+    assert shadow.failed_at == ex.clock and shadow.failures == 1
+    assert shadow.restore_debt == 0.0  # no graceful preempt was paid
+    assert bool(ex.table.allocated[shadow._slot] == 0)
+
+    # completion detaches the shadow and frees its row for reuse
+    ex.run(max_ticks=40)
+    assert ex.jobs["job"].done
+    assert type(ex._shadows["job"]) is not TableJob
+    assert ex.table.slots_in_use == 0
+    assert ex._shadows["job"].done_at is not None

@@ -18,7 +18,12 @@ TICK = 300.0
 BIG_CKPT = 64 << 30  # expensive to stop: high victim cost protects hogs
 
 
-def _overloaded_sim(aging_rate: float, horizon: float, vectorized: bool = True):
+def _overloaded_sim(
+    aging_rate: float,
+    horizon: float,
+    vectorized: bool = True,
+    job_table: bool = True,
+):
     """One 64-GPU cluster permanently saturated by two never-finishing
     premium hogs with huge checkpoints; a same-shape premium job arrives
     at t=300 and queues behind them."""
@@ -55,7 +60,10 @@ def _overloaded_sim(aging_rate: float, horizon: float, vectorized: bool = True):
         jobs,
         policy,
         SimConfig(
-            horizon_seconds=horizon, tick_seconds=TICK, cost_model=CostModel()
+            horizon_seconds=horizon,
+            tick_seconds=TICK,
+            cost_model=CostModel(),
+            job_table=job_table,
         ),
     )
     return sim, sim.run()
@@ -208,6 +216,35 @@ def test_scalar_rate_is_equivalent_to_uniform_mapping():
         for jid in a.jobs:
             assert a.jobs[jid].allocated == b.jobs[jid].allocated
             assert a.jobs[jid].progress == b.jobs[jid].progress
+
+
+def test_queued_since_reset_propagates_through_table_views():
+    """``Job.queued_since`` is reset by the simulator's preemption path;
+    with the JobTable on, the reset is a column write read back through
+    the view — the aging clock (and therefore every subsequent rotation
+    decision) must match the scalar-job run tick for tick."""
+    runs = {}
+    for job_table in (True, False):
+        sim, res = _overloaded_sim(
+            aging_rate=1.0, horizon=8 * 3600.0, job_table=job_table
+        )
+        runs[job_table] = (
+            res.preemptions,
+            tuple(
+                (jid, sim.jobs[jid].queued_since, sim.jobs[jid].allocated)
+                for jid in sorted(sim.jobs)
+            ),
+        )
+    assert runs[True][0] >= 1  # rotation actually happened
+    assert runs[True] == runs[False]
+    # the rotated hog's clock was reset to its preemption tick, not its
+    # arrival — visible through the table view exactly as through the
+    # plain attribute
+    sim, _ = _overloaded_sim(aging_rate=1.0, horizon=8 * 3600.0)
+    preempted = [
+        j for j in sim.jobs.values() if j.preemptions > 0 and j.id != "waiter"
+    ]
+    assert preempted and all(j.queued_since > j.arrival for j in preempted)
 
 
 def test_aging_is_noop_when_queue_drains():

@@ -1,0 +1,372 @@
+"""JobTable vs plain scalar Jobs: the decide path's state source.
+
+The fleet ``JobTable`` is where every simulator/executor job's numeric
+state lives at million-job scale; its contract is that a trace run over
+table-backed jobs is *indistinguishable* from the same trace run over
+plain scalar ``Job`` objects — identical full decision-hash sequences,
+identical ``SimResult`` aggregates and identical per-job terminal state,
+under the vectorized and the legacy event loop, with failures on and
+off.  CI's bench-smoke job enforces the same property at trace scale
+(``sched_scale.py --check-equivalence``).
+
+Mechanically the table mirrors ``FleetSLAAccounts``: slots register on
+adopt (the columns grow by doubling), release on detach and freed rows
+are reused — pinned here the way ``tests/test_sla_ledger.py`` pins the
+ledger's slot lifecycle.
+"""
+import hashlib
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sla import FleetSLAAccounts, FleetSlotAccount
+from repro.scheduler.job_table import JobTable, JobView, TableJob, shared_table
+from repro.scheduler.policy import ElasticPolicy
+from repro.scheduler.reliability import FailureTrace
+from repro.scheduler.simulator import FleetSimulator, SimConfig
+from repro.scheduler.types import Cluster, Fleet, Job, Region
+
+TIER_NAMES = ["premium", "standard", "basic"]
+
+# per-job terminal state folded into the differential digest: everything
+# the table stores, read back through whatever the job ended up as
+STATE_FIELDS = (
+    "allocated",
+    "cluster",
+    "progress",
+    "done_at",
+    "queued_since",
+    "restore_debt",
+    "ever_ran",
+    "snap_progress",
+    "snap_time",
+    "downtime_seconds",
+    "downtime_until",
+    "preemptions",
+    "migrations",
+    "resizes",
+    "failures",
+)
+
+
+def _spec_trace(seed: int, n_jobs: int):
+    """Job constructor kwargs (not objects — each run builds fresh ones,
+    since adoption binds the instances to that run's table)."""
+    rng = np.random.Generator(np.random.Philox(seed))
+    specs = []
+    for i in range(n_jobs):
+        demand = int(2 ** rng.integers(0, 6))
+        specs.append(
+            dict(
+                id=f"j{i}",
+                tier=str(rng.choice(TIER_NAMES)),
+                demand_gpus=demand,
+                gpu_hours=float(rng.uniform(0.05, 2.0)) * demand,
+                arrival=float(rng.uniform(0.0, 6 * 3600.0)),
+                min_gpus=max(1, demand // int(2 ** rng.integers(0, 3))),
+            )
+        )
+    return specs
+
+
+def _fleet():
+    return Fleet(
+        [
+            Region("r0", [Cluster("r0c0", "r0", 64), Cluster("r0c1", "r0", 32)]),
+            Region("r1", [Cluster("r1c0", "r1", 64)]),
+        ]
+    )
+
+
+class _DigestPolicy:
+    def __init__(self, inner):
+        self.inner = inner
+        self.name = inner.name
+        self.digest = hashlib.sha256()
+
+    def bind_costs(self, cost_model, interval_hint):
+        self.inner.bind_costs(cost_model, interval_hint)
+
+    def decide(self, now, jobs, fleet):
+        decision = self.inner.decide(now, jobs, fleet)
+        self.digest.update(
+            repr(
+                (
+                    sorted(decision.alloc.items()),
+                    decision.preemptions,
+                    decision.migrations,
+                )
+            ).encode()
+        )
+        return decision
+
+
+def _run(specs, job_table, vectorized_loop, failures, sla_ledger=True):
+    fleet = _fleet()
+    jobs = [Job(**s) for s in specs]
+    policy = _DigestPolicy(ElasticPolicy())
+    trace = (
+        FailureTrace.cluster_outage("r0c0", at=2 * 3600.0, repair_seconds=3600.0)
+        if failures
+        else None
+    )
+    sim = FleetSimulator(
+        fleet,
+        jobs,
+        policy,
+        SimConfig(
+            horizon_seconds=12 * 3600.0,
+            vectorized=vectorized_loop,
+            job_table=job_table,
+            sla_ledger=sla_ledger,
+            failures=trace,
+        ),
+    )
+    res = sim.run()
+    state = tuple(
+        (j.id,) + tuple(getattr(j, f) for f in STATE_FIELDS) for j in sim._jobs_list
+    )
+    agg = (
+        res.utilization,
+        res.completed,
+        res.preemptions,
+        res.migrations,
+        res.resizes,
+        res.restores,
+        res.queue_seconds,
+        res.gpu_seconds_dead,
+        res.gpu_seconds_idle,
+        res.failure_events,
+        res.job_failures,
+        res.lost_work_gpu_seconds,
+        res.goodput_fraction,
+        tuple(sorted(res.sla_attainment.items())),
+        tuple(sorted(res.mean_jct.items())),
+    )
+    return policy.digest.hexdigest(), agg, state
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 10**6),
+    n_jobs=st.integers(1, 14),
+    vec_loop=st.booleans(),
+    failures=st.booleans(),
+)
+def test_table_backed_runs_match_scalar_runs(seed, n_jobs, vec_loop, failures):
+    """Random traces run twice — JobTable-backed vs plain scalar Jobs —
+    must emit identical decision-hash sequences, aggregates and per-job
+    terminal state, on both event loops, with failures on and off."""
+    specs = _spec_trace(seed, n_jobs)
+    d_t, a_t, s_t = _run(specs, True, vec_loop, failures)
+    d_p, a_p, s_p = _run(specs, False, vec_loop, failures)
+    assert d_t == d_p, (seed, vec_loop, failures)
+    assert a_t == a_p
+    assert s_t == s_p
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_table_without_sla_ledger_matches_scalar(seed):
+    """``sla_ledger=False`` (scalar accounts) with the table on: the
+    policy's SLA consultation falls back per job, everything else stays
+    columnar — still identical to the fully scalar run."""
+    specs = _spec_trace(seed, 10)
+    d_t, a_t, s_t = _run(specs, True, True, False, sla_ledger=False)
+    d_p, a_p, s_p = _run(specs, False, True, False, sla_ledger=False)
+    assert (d_t, a_t, s_t) == (d_p, a_p, s_p)
+
+
+# --------------------------------------------------- slot lifecycle
+def _mk_job(i: int, demand: int = 8) -> Job:
+    return Job(
+        id=f"j{i}",
+        tier="standard",
+        demand_gpus=demand,
+        gpu_hours=float(demand),
+        arrival=60.0 * i,
+    )
+
+
+def test_adopt_flips_class_and_properties_read_columns():
+    table = JobTable(clusters=["c0"], capacity=1)
+    j = _mk_job(0)
+    slot = table.adopt(j)
+    assert isinstance(j, TableJob) and table.slots_in_use == 1
+    # property reads come from the columns, as plain Python scalars
+    assert j.demand_gpus == 8 and type(j.demand_gpus) is int
+    assert j.arrival == 0.0 and type(j.arrival) is float
+    assert j.done_at is None and j.cluster is None
+    # property writes land in the columns
+    j.allocated = 4
+    j.cluster = "c0"
+    j.progress = 0.25
+    assert int(table.allocated[slot]) == 4
+    assert int(table.cluster_idx[slot]) == 0
+    assert float(table.progress[slot]) == 0.25
+    # and column writes are visible through the view
+    table.queued_since[slot] = 123.0
+    assert j.queued_since == 123.0
+
+
+def test_detach_restores_plain_job_and_frees_slot_for_reuse():
+    table = JobTable(clusters=["c0"], capacity=1)
+    j = _mk_job(0)
+    slot = table.adopt(j)
+    j.allocated = 4
+    j.cluster = "c0"
+    j.progress = 1.0
+    j.done_at = 3600.0
+    j.ever_ran = True
+    table.detach(j)
+    assert type(j) is Job and table.slots_in_use == 0
+    # detached state survives exactly
+    assert j.allocated == 4 and j.cluster == "c0"
+    assert j.progress == 1.0 and j.done_at == 3600.0 and j.ever_ran
+    # the freed row is reused by the next adopt, fully reset
+    k = _mk_job(1, demand=2)
+    assert table.adopt(k) == slot
+    assert k.allocated == 0 and k.cluster is None and k.done_at is None
+    assert k.demand_gpus == 2
+
+
+def test_slot_growth_by_doubling():
+    table = JobTable(capacity=2)
+    jobs = [_mk_job(i) for i in range(9)]
+    slots = [table.adopt(j) for j in jobs]
+    assert slots == list(range(9))
+    assert table.slots_in_use == 9 and table.capacity >= 9
+    for i, j in enumerate(jobs):  # state survived the growth
+        assert j.arrival == 60.0 * i
+    table.detach_batch(np.array(slots[:4]))
+    assert table.slots_in_use == 5
+    assert all(type(j) is Job for j in jobs[:4])
+    assert all(isinstance(j, TableJob) for j in jobs[4:])
+
+
+def test_shared_table_detection_mixed_and_foreign():
+    """The policy's fallback contract, as in ``_shared_ledger``: a plain
+    list of same-table views resolves to (table, slots); mixed or
+    foreign-table lists fall back to the object path."""
+    t1, t2 = JobTable(), JobTable()
+    a, b, c = _mk_job(0), _mk_job(1), _mk_job(2)
+    t1.adopt(a)
+    t1.adopt(b)
+    t2.adopt(c)
+    table, slots = shared_table([a, b])
+    assert table is t1 and list(slots) == [a._slot, b._slot]
+    assert shared_table([a, c]) == (None, None)  # foreign table mixed in
+    assert shared_table([a, _mk_job(3)]) == (None, None)  # plain Job mixed
+    view = JobView(t1, np.array([b._slot], np.int64))
+    assert shared_table(view) == (t1, view.slots)
+    assert list(view) == [b] and view[0] is b and len(view) == 1
+
+
+def test_adopted_account_mirrors_ledger_slot_into_column():
+    """Ledger slots register lazily; every registration path must sync
+    the table's sla_slot column so the policy can trust it."""
+    sla = FleetSLAAccounts()
+    table = JobTable(sla=sla)
+    j = _mk_job(0)
+    j.account = FleetSlotAccount(sla, j.tier, j.demand_gpus)
+    slot = table.adopt(j)
+    assert bool(table.sla_view[slot])
+    assert int(table.sla_slot[slot]) == -1  # not registered yet
+    j.account.record(0.0, 300.0, 4)  # lazy registration happens here
+    assert int(table.sla_slot[slot]) == j.account.slot >= 0
+    # scalar accounts are flagged out so the policy falls back per job
+    k = _mk_job(1)
+    kslot = table.adopt(k)
+    assert not bool(table.sla_view[kslot])
+
+
+def test_decision_alloc_mapping_matches_scalar_dict():
+    """The lazily-materialized Decision.alloc of the table path equals
+    the scalar path's dict, entry for entry."""
+    fleet = _fleet()
+    specs = _spec_trace(3, 8)
+    now = 7 * 3600.0
+
+    def decision_for(job_table: bool):
+        jobs = [Job(**s) for s in specs]
+        policy = ElasticPolicy()
+        sim = FleetSimulator(
+            fleet if job_table else _fleet(),
+            jobs,
+            policy,
+            SimConfig(job_table=job_table),
+        )
+        table = sim.fleet.jobs  # the fleet carries the driver's table
+        active = table.view(np.arange(len(jobs))) if job_table else list(jobs)
+        return policy.decide(now, active, sim.fleet)
+
+    d_t = decision_for(True)
+    d_p = decision_for(False)
+    assert dict(d_t.alloc) == dict(d_p.alloc)
+    assert sorted(d_t.alloc.items()) == sorted(d_p.alloc.items())
+    assert len(d_t.alloc) == len(specs)
+    assert d_t.table_update is not None
+    assert d_p.table_update is None
+
+
+def test_foreign_table_jobs_keep_object_path_in_simulator():
+    """Jobs already adopted by another table: the simulator must refuse
+    the fast path (slot != index) and still produce a correct run."""
+    foreign = JobTable()
+    specs = _spec_trace(11, 6)
+    jobs = [Job(**s) for s in specs]
+    for j in jobs:
+        foreign.adopt(j)
+    fleet = _fleet()
+    sim = FleetSimulator(fleet, jobs, ElasticPolicy(), SimConfig())
+    assert sim._table is None  # fast path refused
+    assert fleet.jobs is None  # and the fleet carries no table handle
+    res = sim.run()
+    d_p, a_p, _ = _run(specs, False, True, False)
+    assert (
+        res.utilization,
+        res.completed,
+        res.preemptions,
+        res.migrations,
+        res.resizes,
+    ) == (a_p[0], a_p[1], a_p[2], a_p[3], a_p[4])
+
+
+def test_fleet_handle_tracks_current_driver_and_pinned_table_cannot_grow():
+    """A reused Fleet's ``jobs`` handle must follow the CURRENT
+    simulator's table (never a stale detached one), and a table whose
+    columns are bound into an event loop must refuse to grow (growth
+    would silently decouple the bound views)."""
+    fleet = _fleet()
+    specs = _spec_trace(5, 4)
+    sim1 = FleetSimulator(
+        fleet, [Job(**s) for s in specs], ElasticPolicy(), SimConfig()
+    )
+    t1 = fleet.jobs
+    assert t1 is sim1._table
+    sim1.run()
+    sim2 = FleetSimulator(
+        fleet, [Job(**s) for s in specs], ElasticPolicy(), SimConfig()
+    )
+    assert fleet.jobs is sim2._table and fleet.jobs is not t1
+    # the run bound and pinned sim1's table: adopting past its capacity
+    # must assert instead of silently replacing the bound arrays
+    assert t1.pinned
+    extra = [_mk_job(100 + i) for i in range(t1.capacity + 1)]
+    try:
+        for j in extra:
+            t1.adopt(j)
+    except AssertionError:
+        pass
+    else:
+        raise AssertionError("pinned table grew under a bound event loop")
+
+
+def test_dataclass_repr_reads_live_columns():
+    table = JobTable(clusters=["c0"])
+    j = _mk_job(0)
+    table.adopt(j)
+    j.allocated = 4
+    assert "allocated=4" in repr(j)  # dataclass repr reads properties
+    table.detach(j)
+    assert "allocated=4" in repr(j)  # and survives detach unchanged

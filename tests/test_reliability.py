@@ -56,7 +56,9 @@ def _storm_trace(fleet) -> FailureTrace:
     )
 
 
-def _storm_sim(vectorized_policy: bool = True, cadence=None, digest=False):
+def _storm_sim(
+    vectorized_policy: bool = True, cadence=None, digest=False, job_table=True
+):
     fleet = make_fleet()
     jobs = synth_workload(250, fleet.total(), seed=1234, mean_interarrival=120.0)
     policy = ElasticPolicy(vectorized=vectorized_policy)
@@ -71,6 +73,7 @@ def _storm_sim(vectorized_policy: bool = True, cadence=None, digest=False):
             failures=_storm_trace(fleet),
             cadence=cadence,
             validate=True,  # capacity conservation asserted every decision
+            job_table=job_table,
         ),
     )
     return sim, wrapper
@@ -268,6 +271,40 @@ def test_cadence_strictly_improves_goodput():
     assert with_cad.snapshots > 0
     assert with_cad.lost_work_gpu_seconds < base.lost_work_gpu_seconds
     assert with_cad.goodput_fraction > base.goodput_fraction
+
+
+def test_vectorized_cadence_matches_scalar_sweep_snapshot_for_snapshot():
+    """With the JobTable on, the cadence sweep is one masked vector
+    update over the columns; with it off, the scalar per-job loop.  On
+    the seeded storm both must snapshot the same jobs at the same times
+    with the same charges — and the decisions must not shift by a bit."""
+    cad = CheckpointCadence(cost_model=CostModel(), failure_model=_storm_model())
+    runs = {}
+    for job_table in (True, False):
+        sim, wrapper = _storm_sim(cadence=cad, digest=True, job_table=job_table)
+        res = sim.run()
+        per_job = tuple(
+            (
+                j.id,
+                j.snap_progress,
+                j.snap_time,
+                j.downtime_seconds,
+                j.downtime_until,
+                j.progress,
+                j.failures,
+            )
+            for j in sim._jobs_list
+        )
+        runs[job_table] = (
+            wrapper.digest.hexdigest(),
+            res.snapshots,
+            res.lost_work_gpu_seconds,
+            res.goodput_fraction,
+            res.gpu_seconds_dead,
+            per_job,
+        )
+    assert runs[True][1] > 0  # the cadence actually snapshotted
+    assert runs[True] == runs[False]
 
 
 def test_young_daly_interval_tradeoffs():
