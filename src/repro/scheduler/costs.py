@@ -380,3 +380,15 @@ def default_checkpoint_bytes(demand_gpus: int,
     model_shards = max(1, demand_gpus // 8)    # DP degree ~8 in the fleet mix
     return model_shards * state_bytes_per_gpu \
         + demand_gpus * host_bytes_per_worker
+
+
+def defrag_worthwhile(cost_model: CostModel,
+                      checkpoint_bytes: Iterable[int],
+                      freed_gpus: int,
+                      interval_seconds: float) -> bool:
+    """Gate for a defragmentation move: consolidating a node's stranded
+    fragments is worth it only when one scheduling interval of the freed
+    capacity (GPU-seconds a queued gang could now use) outweighs the
+    intra-cluster migrate downtime charged to every moved job."""
+    cost = sum(cost_model.migrate_seconds(cb) for cb in checkpoint_bytes)
+    return cost < float(freed_gpus) * float(interval_seconds)

@@ -37,6 +37,7 @@ from repro.core.migration import checkpoint_job
 from repro.core.sla import FleetSLAAccounts, FleetSlotAccount
 from repro.scheduler.costs import CostModel
 from repro.scheduler.job_table import JobTable, TableJob
+from repro.scheduler.node_map import NodeMap
 from repro.scheduler.policy import ElasticPolicy
 from repro.scheduler.types import Cluster, Fleet, Job, Region
 
@@ -99,6 +100,10 @@ class FleetExecutor:
             sla=self.sla,
             jobs=self.table,
         )
+        # shadows carry real node spans: the policy's gang/splice-aware
+        # node placement sees the same NodeMap shape the simulator would,
+        # so its divisor rounding matches the executor's splice constraint
+        self.fleet.node_map = NodeMap.from_fleet(self.fleet)
         self.tick_seconds = tick_seconds
         self.clock = 0.0
         self._shadows: Dict[str, Job] = {}  # workload-scope policy mirrors
@@ -129,7 +134,7 @@ class FleetExecutor:
             min_gpus=1,
             account=FleetSlotAccount(self.sla, job.tier, job.world_size),
         )
-        self.table.adopt(shadow)
+        shadow.node_slot = self.table.adopt(shadow)  # NodeMap row == slot
         self._shadows[job.id] = shadow
 
     # ------------------------------------------------------------ policy
@@ -217,6 +222,22 @@ class FleetExecutor:
             if target > 0:
                 shadow.ever_ran = True
                 shadow.cluster = "local"
+        self._sync_node_spans()
+
+    def _sync_node_spans(self) -> None:
+        """Mirror the applied slot allocations into the fleet NodeMap so
+        the next decide pass plans against real node spans (row == table
+        slot; the one-cluster fleet auto-fits lowest-index first)."""
+        nm = self.fleet.node_map
+        for s in self._shadows.values():
+            if s.done_at is not None:
+                continue
+            g = int(s.allocated)
+            if nm.span_total(s.node_slot) == g:
+                continue
+            nm.release(s.node_slot)
+            if g > 0:
+                nm.auto_fit(s.node_slot, 0, g)
 
     # ------------------------------------------------------------ faults
     def inject_failure(self, jid: str) -> Dict:
@@ -241,6 +262,7 @@ class FleetExecutor:
         job.steps_done = snap_step
         shadow = self._shadows[jid]
         shadow.allocated = 0
+        self.fleet.node_map.release(shadow.node_slot)
         shadow.failures += 1
         shadow.failed_at = self.clock
         shadow.queued_since = self.clock  # fairness aging restarts here
@@ -285,6 +307,7 @@ class FleetExecutor:
                 shadow.done_at = self.clock
                 shadow.allocated = 0
                 shadow.account.release()
+                self.fleet.node_map.release(shadow.node_slot)
                 if isinstance(shadow, TableJob):
                     self.table.detach(shadow)  # row freed for reuse
                 self.log.append(

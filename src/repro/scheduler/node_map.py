@@ -1,0 +1,644 @@
+"""Fleet-wide node-granular placement state (the NodeMap).
+
+Placement used to stop at cluster granularity: a job carried a
+``cluster_idx`` scalar, and everything below it — which nodes the
+replicas actually sit on — was approximated.  Partial-domain failures
+picked victims by (arrival, id) packing order, gang/splice constraints
+were invisible to placement, and fragmentation could not even be
+measured.  The NodeMap makes the node layer real, with the same
+struct-of-arrays recipe as ``JobTable``/``FleetSLAAccounts``:
+
+**Node axis** (one entry per node, laid out cluster-contiguously in
+``fleet.clusters()`` order; a trailing partial node keeps its TRUE
+smaller capacity):
+
+- ``node_cap``      — GPUs physically on the node
+- ``node_cluster``  — owning cluster index
+- ``node_free``     — GPUs idle and healthy
+- ``node_used``     — GPUs held by live job spans
+- ``node_out``      — UNCLAMPED sum of outstanding failure claims; dead
+  capacity is ``min(cap, out)`` so overlapping failures never resurrect
+  capacity when the shorter one repairs first (the cluster-level
+  ``_outstanding`` rule, per node)
+
+The invariant ``free + used + min(cap, out) == cap`` holds per node at
+every tick and is asserted by :meth:`NodeMap.check`.
+
+**Row axis** (one row per job, row index == the driver's table slot /
+trace index): ``row_off``/``row_len`` address a piece pool
+(``span_node``/``span_gpus``/``span_row``) holding the job's node span —
+the list of (node, gpus) pieces it occupies.  Rows grow by doubling and
+are reused after release; the pool is bump-allocated and compacted when
+more than half of it is garbage.
+
+**Gang/splice compatibility.**  A job that demands ``D`` GPUs can only
+run at world sizes the device-proxy splice supports: divisors of ``D``
+(time-sliced shrink) or multiples of ``D`` (scale-out).  ``gang_down``
+rounds an arbitrary grant to the largest compatible value below it; the
+placement overlay only ever fits compatible gangs, shaped as ``w`` full
+nodes plus one remainder piece ``r = g % gpus_per_node`` on a best-fit
+partial node (smallest sufficient free count, lowest index on ties).
+
+**Fragmentation.**  A free GPU is *stranded* when it sits in a hole too
+small to host the smallest single-node piece any queued gang could use
+(``min_piece``).  ``stranded_gpus`` is the fleet-wide count, reported
+time-averaged in ``SimResult.fragmentation_stranded_gpus``; the
+simulator's defragmentation pass consolidates such holes when the freed
+capacity is worth the charged migration downtime (``costs.defrag_worthwhile``).
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import TYPE_CHECKING, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+if TYPE_CHECKING:  # avoid the import cycle: types builds the NodeMap
+    from repro.scheduler.types import Fleet
+
+
+# --------------------------------------------------------- gang arithmetic
+@lru_cache(maxsize=None)
+def splice_divisors(demand: int) -> Tuple[int, ...]:
+    """Ascending divisors of ``demand`` — the shrink-side world sizes the
+    splice mechanism supports (§5.4)."""
+    d = max(1, int(demand))
+    return tuple(k for k in range(1, d + 1) if d % k == 0)
+
+
+def gang_down(g: int, demand: int) -> int:
+    """Largest splice-compatible world size at or below ``g`` (0 if none):
+    a multiple of ``demand`` when ``g >= demand``, else the largest
+    divisor of ``demand`` below it."""
+    if g <= 0:
+        return 0
+    if g >= demand:
+        return g - g % demand
+    divs = splice_divisors(demand)
+    lo = 0
+    for d in divs:
+        if d > g:
+            break
+        lo = d
+    return lo
+
+
+def gang_down_vec(galloc: np.ndarray, demand: np.ndarray) -> np.ndarray:
+    """Vector ``gang_down`` over per-job grants: multiples round in one
+    modulo pass; sub-demand grants loop over the (few) unique demands,
+    each resolved with one searchsorted against its divisor table."""
+    out = galloc.copy()
+    pos = galloc > 0
+    ge = pos & (galloc >= demand)
+    if ge.any():
+        out[ge] = galloc[ge] - galloc[ge] % demand[ge]
+    lt = pos & ~ge
+    if lt.any():
+        for d in np.unique(demand[lt]):
+            m = lt & (demand == d)
+            divs = np.asarray(splice_divisors(int(d)), np.int64)
+            out[m] = divs[np.searchsorted(divs, galloc[m], side="right") - 1]
+    return out
+
+
+@lru_cache(maxsize=None)
+def gang_values(demand: int, lo: int, hi: int) -> Tuple[int, ...]:
+    """Splice-compatible world sizes in ``[lo, hi]``, descending — the
+    candidate ladder for shrink-to-hole placement."""
+    vals = [d for d in splice_divisors(demand) if lo <= d <= hi and d < demand]
+    m = demand
+    while m <= hi:
+        if m >= lo:
+            vals.append(m)
+        m += demand
+    return tuple(sorted(vals, reverse=True))
+
+
+@lru_cache(maxsize=None)
+def floor_gang(demand: int, min_gpus: int) -> int:
+    """Smallest splice-compatible world size at or above ``min_gpus``
+    (0 if none) — the smallest gang a queued job could be admitted at,
+    the shape the defragmentation pass tries to unblock."""
+    d = max(1, int(demand))
+    lo = max(1, int(min_gpus))
+    hi = d * -(-lo // d)  # first multiple of demand at or above the floor
+    vals = gang_values(d, lo, max(hi, lo))
+    return vals[-1] if vals else 0
+
+
+@lru_cache(maxsize=None)
+def min_piece(demand: int, min_gpus: int, gpus_per_node: int) -> int:
+    """Smallest single-node piece any admissible gang of this job could
+    occupy: over every compatible world size ``g >= min_gpus``, the
+    smallest of its node pieces (``g`` itself below a node, else the
+    remainder ``g % gpus_per_node`` or a full node).  Free capacity in a
+    hole smaller than this can never serve the job — it is stranded."""
+    gpn = max(1, int(gpus_per_node))
+    lo = max(1, int(min_gpus))
+    best = gpn
+    for g in gang_values(int(demand), lo, 2 * max(int(demand), lo)):
+        if g < gpn:
+            piece = g
+        else:
+            r = g % gpn
+            piece = r if r else gpn
+        if piece < best:
+            best = piece
+    return best
+
+
+# ---------------------------------------------------------------- NodeMap
+class NodeMap:
+    """Simulator-owned SoA of per-node capacity and per-job node spans."""
+
+    def __init__(
+        self,
+        node_cap: np.ndarray,
+        node_cluster: np.ndarray,
+        cluster_lo: np.ndarray,
+        cluster_hi: np.ndarray,
+        cluster_gpn: np.ndarray,
+        capacity_rows: int = 64,
+    ):
+        self.node_cap = node_cap.astype(np.int64)
+        self.node_cluster = node_cluster.astype(np.int64)
+        self.node_free = self.node_cap.copy()
+        self.node_used = np.zeros_like(self.node_cap)
+        self.node_out = np.zeros_like(self.node_cap)
+        self.cluster_lo = cluster_lo.astype(np.int64)
+        self.cluster_hi = cluster_hi.astype(np.int64)
+        self.cluster_gpn = cluster_gpn.astype(np.int64)
+        self.n_clusters = int(cluster_lo.size)
+        rows = max(1, int(capacity_rows))
+        self.row_off = np.zeros(rows, np.int64)
+        self.row_len = np.zeros(rows, np.int64)
+        self.row_total = np.zeros(rows, np.int64)
+        self.row_k = np.full(rows, -1, np.int64)
+        pool = max(4, 2 * rows)
+        self.span_node = np.zeros(pool, np.int64)
+        self.span_gpus = np.zeros(pool, np.int64)
+        self.span_row = np.full(pool, -1, np.int64)
+        self._pool_n = 0
+        self._garbage = 0
+
+    @classmethod
+    def from_fleet(cls, fleet: "Fleet", capacity_rows: int = 64) -> "NodeMap":
+        caps: List[int] = []
+        owner: List[int] = []
+        lo: List[int] = []
+        hi: List[int] = []
+        gpn: List[int] = []
+        for k, c in enumerate(fleet.clusters()):
+            nc = c.node_capacities()
+            lo.append(len(caps))
+            caps.extend(nc)
+            hi.append(len(caps))
+            owner.extend([k] * len(nc))
+            gpn.append(max(1, c.gpus_per_node))
+        return cls(
+            np.asarray(caps, np.int64),
+            np.asarray(owner, np.int64),
+            np.asarray(lo, np.int64),
+            np.asarray(hi, np.int64),
+            np.asarray(gpn, np.int64),
+            capacity_rows=capacity_rows,
+        )
+
+    # ---------------------------------------------------------- row spans
+    def _ensure_row(self, row: int) -> None:
+        n = self.row_len.size
+        if row < n:
+            return
+        m = max(64, n)
+        while m <= row:
+            m *= 2
+        grow = m - n
+        self.row_off = np.concatenate([self.row_off, np.zeros(grow, np.int64)])
+        self.row_len = np.concatenate([self.row_len, np.zeros(grow, np.int64)])
+        self.row_total = np.concatenate([self.row_total, np.zeros(grow, np.int64)])
+        self.row_k = np.concatenate([self.row_k, np.full(grow, -1, np.int64)])
+
+    def _pool_reserve(self, extra: int) -> None:
+        need = self._pool_n + extra
+        cap = self.span_node.size
+        if need <= cap:
+            return
+        if self._garbage > self._pool_n // 2:
+            self._compact()
+            need = self._pool_n + extra
+            if need <= self.span_node.size:
+                return
+            cap = self.span_node.size
+        m = max(4, cap)
+        while m < need:
+            m *= 2
+        pad = m - cap
+        self.span_node = np.concatenate([self.span_node, np.zeros(pad, np.int64)])
+        self.span_gpus = np.concatenate([self.span_gpus, np.zeros(pad, np.int64)])
+        self.span_row = np.concatenate([self.span_row, np.full(pad, -1, np.int64)])
+
+    def _compact(self) -> None:
+        pn = self._pool_n
+        keep = self.span_gpus[:pn] > 0
+        node = self.span_node[:pn][keep]
+        gpus = self.span_gpus[:pn][keep]
+        rows = self.span_row[:pn][keep]
+        live = int(node.size)
+        self.span_node[:live] = node
+        self.span_gpus[:live] = gpus
+        self.span_row[:live] = rows
+        self.span_gpus[live:pn] = 0
+        self.span_row[live:pn] = -1
+        self._pool_n = live
+        self._garbage = 0
+        # pieces of one row stay contiguous under a stable filter; each
+        # live row owns exactly one run, so boundaries are value changes
+        if live:
+            change = np.flatnonzero(np.diff(rows) != 0) + 1
+            starts = np.concatenate(([0], change))
+            self.row_off[rows[starts]] = starts
+
+    def has_span(self, row: int) -> bool:
+        return 0 <= row < self.row_len.size and self.row_len[row] > 0
+
+    def span_total(self, row: int) -> int:
+        if not self.has_span(row):
+            return 0
+        return int(self.row_total[row])
+
+    def span_cluster(self, row: int) -> int:
+        if not self.has_span(row):
+            return -1
+        return int(self.row_k[row])
+
+    def row_pieces(self, row: int) -> Tuple[np.ndarray, np.ndarray]:
+        if not self.has_span(row):
+            return np.empty(0, np.int64), np.empty(0, np.int64)
+        sl = slice(int(self.row_off[row]), int(self.row_off[row] + self.row_len[row]))
+        return self.span_node[sl], self.span_gpus[sl]
+
+    def row_state(
+        self, rows: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(has_span, span_cluster, span_total) gathered for many rows at
+        once — the decide path's zero-Python span lookup."""
+        safe = (rows >= 0) & (rows < self.row_len.size)
+        rr = np.where(safe, rows, 0)
+        has = safe & (self.row_len[rr] > 0)
+        tot = np.where(has, self.row_total[rr], 0)
+        k = np.where(has, self.row_k[rr], -1)
+        return has, k, tot
+
+    def assign(self, row: int, nodes: Sequence[int], gpus: Sequence[int]) -> None:
+        """Install a span (one piece per distinct node).  ``release`` any
+        previous span first."""
+        self._ensure_row(row)
+        assert self.row_len[row] == 0, f"row {row} already holds a span"
+        nodes = np.asarray(nodes, np.int64)
+        gpus = np.asarray(gpus, np.int64)
+        n = int(nodes.size)
+        assert n > 0 and (gpus > 0).all()
+        self._pool_reserve(n)
+        off = self._pool_n
+        self.span_node[off : off + n] = nodes
+        self.span_gpus[off : off + n] = gpus
+        self.span_row[off : off + n] = row
+        self._pool_n = off + n
+        self.row_off[row] = off
+        self.row_len[row] = n
+        self.row_total[row] = int(gpus.sum())
+        self.row_k[row] = int(self.node_cluster[nodes[0]])
+        self.node_free[nodes] -= gpus
+        self.node_used[nodes] += gpus
+        assert (self.node_free[nodes] >= 0).all(), (
+            f"node over-subscribed placing row {row}"
+        )
+
+    def release(self, row: int) -> None:
+        if not self.has_span(row):
+            return
+        ln = int(self.row_len[row])
+        sl = slice(int(self.row_off[row]), int(self.row_off[row]) + ln)
+        nodes = self.span_node[sl]
+        gpus = self.span_gpus[sl]
+        self.node_free[nodes] += gpus
+        self.node_used[nodes] -= gpus
+        self.span_gpus[sl] = 0
+        self.span_row[sl] = -1
+        self._garbage += ln
+        self.row_len[row] = 0
+        self.row_total[row] = 0
+        self.row_k[row] = -1
+
+    def live_rows(self) -> np.ndarray:
+        return np.flatnonzero(self.row_len > 0)
+
+    def auto_fit(self, row: int, k: int, gpus: int) -> None:
+        """Lowest-index greedy fill ignoring gang shape — the fallback
+        span for policies that do not plan node placement (the static
+        gang baseline, hand-written policies).  Asserts the cluster can
+        hold the grant: per-node conservation rejects over-allocation
+        even for planless policies."""
+        lo, hi = int(self.cluster_lo[k]), int(self.cluster_hi[k])
+        seg = self.node_free[lo:hi]
+        nodes: List[int] = []
+        take: List[int] = []
+        rem = int(gpus)
+        for j in np.flatnonzero(seg > 0):
+            t = min(rem, int(seg[j]))
+            nodes.append(lo + int(j))
+            take.append(t)
+            rem -= t
+            if rem == 0:
+                break
+        assert rem == 0, (
+            f"cluster {k} over-allocated: no node capacity for {gpus} GPUs"
+        )
+        self.assign(row, nodes, take)
+
+    def move_piece(self, row: int, from_node: int, to_node: int) -> int:
+        """Defragmentation move: relocate this row's piece off
+        ``from_node`` onto ``to_node`` (merging with an existing piece
+        there).  Returns the GPUs moved."""
+        nodes, gpus = self.row_pieces(row)
+        pieces = {int(n): int(g) for n, g in zip(nodes, gpus)}
+        g = pieces.pop(int(from_node))
+        pieces[int(to_node)] = pieces.get(int(to_node), 0) + g
+        self.release(row)
+        self.assign(row, list(pieces.keys()), list(pieces.values()))
+        return g
+
+    # ------------------------------------------------------ failure claims
+    def fail_claims(self, k: int, want: int) -> List[Tuple[int, int]]:
+        """Per-node claim list for a failure of ``want`` GPUs on cluster
+        ``k``.  A whole-domain failure claims every node's full capacity
+        UNCLAMPED (so it owns the capacity regardless of prior claims);
+        a partial failure claims currently-claimable capacity ascending
+        by node index, any unclaimable leftover landing on the first
+        node for bookkeeping symmetry."""
+        lo, hi = int(self.cluster_lo[k]), int(self.cluster_hi[k])
+        caps = self.node_cap[lo:hi]
+        if want >= int(caps.sum()):
+            return [(lo + i, int(caps[i])) for i in range(hi - lo)]
+        claims: List[Tuple[int, int]] = []
+        remaining = int(want)
+        for i in range(lo, hi):
+            if remaining <= 0:
+                break
+            cap = int(self.node_cap[i])
+            avail = cap - min(cap, int(self.node_out[i]))
+            take = min(avail, remaining)
+            if take > 0:
+                claims.append((i, take))
+                remaining -= take
+        if remaining > 0:
+            claims.append((lo, remaining))
+        return claims
+
+    def apply_claims(self, claims: List[Tuple[int, int]]) -> List[int]:
+        """Kill capacity per the claim list.  Each node's effective dead
+        increase eats free GPUs first, then kills jobs with pieces on the
+        node in ascending row order (the whole gang dies; its span is
+        released everywhere).  Returns the victim rows."""
+        victims: List[int] = []
+        for node, take in claims:
+            cap = int(self.node_cap[node])
+            old = min(cap, int(self.node_out[node]))
+            self.node_out[node] += take
+            e = min(cap, int(self.node_out[node])) - old
+            x = min(int(self.node_free[node]), e)
+            self.node_free[node] -= x
+            e -= x
+            while e > 0:
+                r = self._lowest_row_on(node)
+                assert r >= 0, f"node {node}: dead exceeds free+used"
+                self.release(r)
+                victims.append(r)
+                x = min(int(self.node_free[node]), e)
+                self.node_free[node] -= x
+                e -= x
+        return victims
+
+    def repair_claims(self, claims: List[Tuple[int, int]]) -> None:
+        """Undo a failure's claims: capacity returns only down to the
+        other claims still outstanding on each node."""
+        for node, take in claims:
+            cap = int(self.node_cap[node])
+            old = min(cap, int(self.node_out[node]))
+            self.node_out[node] = max(0, int(self.node_out[node]) - take)
+            self.node_free[node] += old - min(cap, int(self.node_out[node]))
+
+    def _lowest_row_on(self, node: int) -> int:
+        pn = self._pool_n
+        m = (self.span_node[:pn] == node) & (self.span_gpus[:pn] > 0)
+        rows = self.span_row[:pn][m]
+        return int(rows.min()) if rows.size else -1
+
+    def rows_on_node(self, node: int) -> np.ndarray:
+        pn = self._pool_n
+        m = (self.span_node[:pn] == node) & (self.span_gpus[:pn] > 0)
+        return np.unique(self.span_row[:pn][m])
+
+    def cluster_dead(self, k: int) -> int:
+        lo, hi = int(self.cluster_lo[k]), int(self.cluster_hi[k])
+        return int(
+            np.minimum(self.node_cap[lo:hi], self.node_out[lo:hi]).sum()
+        )
+
+    def cluster_free_vector(self) -> np.ndarray:
+        return np.add.reduceat(self.node_free, self.cluster_lo)
+
+    # ------------------------------------------------------- fragmentation
+    def stranded_gpus(self, queued_shapes: Sequence[Tuple[int, int]]) -> int:
+        """Free GPUs sitting in holes no queued gang can use: for each
+        cluster, free capacity on nodes with ``0 < free < min_piece``
+        where ``min_piece`` is the smallest single-node piece any queued
+        (demand, min_gpus) shape admits at that cluster's node size."""
+        if not queued_shapes:
+            return 0
+        total = 0
+        for k in range(self.n_clusters):
+            gpn = int(self.cluster_gpn[k])
+            mp = min(min_piece(d, m, gpn) for d, m in queued_shapes)
+            seg = self.node_free[int(self.cluster_lo[k]) : int(self.cluster_hi[k])]
+            total += int(seg[(seg > 0) & (seg < mp)].sum())
+        return total
+
+    # ----------------------------------------------------------- invariant
+    def check(self) -> None:
+        dead = np.minimum(self.node_cap, self.node_out)
+        assert (self.node_free >= 0).all(), "negative node free count"
+        assert (self.node_used >= 0).all(), "negative node used count"
+        assert (self.node_free + self.node_used + dead == self.node_cap).all(), (
+            "per-node conservation violated (free + used + dead != cap)"
+        )
+        pn = self._pool_n
+        live = self.span_gpus[:pn] > 0
+        used = np.zeros(self.node_cap.size, np.int64)
+        np.add.at(used, self.span_node[:pn][live], self.span_gpus[:pn][live])
+        assert (used == self.node_used).all(), "span pool != node_used"
+
+    def overlay(self) -> "PlacementOverlay":
+        return PlacementOverlay(self)
+
+
+# ------------------------------------------------------- placement overlay
+class PlacementOverlay:
+    """A decide-pass view of node free counts: the policy releases and
+    fits spans against the overlay without touching the NodeMap, and the
+    accumulated plan (``released`` rows + ``assigns`` pieces) is committed
+    by the simulator's ``_apply``.  Per-cluster gang-feasibility stats
+    (empty-node count, largest partial hole) are numpy segment reductions,
+    cached and recomputed only for clusters the pass dirtied."""
+
+    __slots__ = (
+        "nm",
+        "free",
+        "cfree",
+        "_empty",
+        "_maxp",
+        "_dirty",
+        "released",
+        "assigns",
+    )
+
+    def __init__(self, nm: NodeMap):
+        self.nm = nm
+        self.free = nm.node_free.copy()
+        self.cfree = nm.cluster_free_vector().astype(np.int64)
+        k = nm.n_clusters
+        self._empty = np.zeros(k, np.int64)
+        self._maxp = np.zeros(k, np.int64)
+        self._dirty = np.ones(k, bool)
+        self.released: List[int] = []
+        self.assigns: List[Optional[Tuple[int, List[int], List[int]]]] = []
+
+    def release_row(self, row: int) -> None:
+        nm = self.nm
+        nodes, gpus = nm.row_pieces(row)
+        if nodes.size:
+            self.free[nodes] += gpus
+            ks = nm.node_cluster[nodes]
+            np.add.at(self.cfree, ks, gpus)
+            self._dirty[np.unique(ks)] = True
+        self.released.append(row)
+
+    def _stats(self, k: int) -> Tuple[int, int]:
+        if self._dirty[k]:
+            nm = self.nm
+            seg = self.free[int(nm.cluster_lo[k]) : int(nm.cluster_hi[k])]
+            gpn = int(nm.cluster_gpn[k])
+            self._empty[k] = int(np.count_nonzero(seg == gpn))
+            part = seg[seg < gpn]
+            self._maxp[k] = int(part.max()) if part.size else 0
+            self._dirty[k] = False
+        return int(self._empty[k]), int(self._maxp[k])
+
+    def feasible(self, k: int, g: int) -> bool:
+        """Can cluster ``k`` host a gang of ``g`` as ``w`` full nodes plus
+        one remainder piece?"""
+        gpn = int(self.nm.cluster_gpn[k])
+        w, r = divmod(int(g), gpn)
+        empty, maxp = self._stats(k)
+        if empty < w:
+            return False
+        return r == 0 or maxp >= r or empty >= w + 1
+
+    def feasible_vec(self, g: int) -> np.ndarray:
+        """``feasible`` for every cluster at once — one vector expression
+        instead of a Python call per cluster (the decide path's per-job
+        pool test)."""
+        for k in np.flatnonzero(self._dirty):
+            self._stats(int(k))
+        gpn = self.nm.cluster_gpn
+        w = g // gpn
+        r = g - w * gpn
+        return (self._empty >= w) & (
+            (r == 0) | (self._maxp >= r) | (self._empty >= w + 1)
+        )
+
+    def best_value(self, k: int, demand: int, lo: int, hi: int) -> int:
+        """Largest splice-compatible world size in ``[lo, hi]`` that
+        cluster ``k`` can host (0 if none)."""
+        for v in gang_values(int(demand), int(lo), int(hi)):
+            if self.feasible(k, v):
+                return v
+        return 0
+
+    def undo(self, idx: int) -> None:
+        """Reverse a fit made earlier this pass (the entry is tombstoned;
+        the caller filters ``assigns`` before committing)."""
+        row, nodes, gpus = self.assigns[idx]
+        ns = np.asarray(nodes, np.int64)
+        gs = np.asarray(gpus, np.int64)
+        self.free[ns] += gs
+        ks = self.nm.node_cluster[ns]
+        np.add.at(self.cfree, ks, gs)
+        self._dirty[np.unique(ks)] = True
+        self.assigns[idx] = None
+
+    def fit_any(self, row: int, k: int, g: int) -> None:
+        """Place a gang that fits the cluster's aggregate free capacity:
+        the clean shape (``fit``) when feasible, else a scattered fill —
+        largest holes first (lowest index on ties), which minimizes the
+        piece count.  The device-proxy makes scattered placement legal;
+        it is merely the low-locality fallback the defragmentation pass
+        exists to avoid."""
+        if self.feasible(k, g):
+            self.fit(row, k, g)
+            return
+        nm = self.nm
+        lo, hi = int(nm.cluster_lo[k]), int(nm.cluster_hi[k])
+        seg = self.free[lo:hi]
+        order = np.lexsort((np.arange(seg.size), -seg))
+        nodes: List[int] = []
+        gpus: List[int] = []
+        rem = int(g)
+        for j in order:
+            take = min(rem, int(seg[j]))
+            if take <= 0:
+                break
+            nodes.append(lo + int(j))
+            gpus.append(take)
+            seg[j] -= take
+            rem -= take
+            if rem == 0:
+                break
+        assert rem == 0, "fit_any() without aggregate capacity"
+        self.cfree[k] -= int(g)
+        self._dirty[k] = True
+        self.assigns.append((row, nodes, gpus))
+
+    def fit(self, row: int, k: int, g: int) -> None:
+        """Place a feasible gang: full pieces on the lowest-index empty
+        nodes, the remainder best-fit into the smallest sufficient
+        partial hole (lowest index on ties; the next empty node when no
+        partial hole fits)."""
+        nm = self.nm
+        lo, hi = int(nm.cluster_lo[k]), int(nm.cluster_hi[k])
+        gpn = int(nm.cluster_gpn[k])
+        w, r = divmod(int(g), gpn)
+        seg = self.free[lo:hi]  # view: writes land in self.free
+        nodes: List[int] = []
+        gpus: List[int] = []
+        if w:
+            empt = np.flatnonzero(seg == gpn)[:w]
+            assert empt.size == w, "fit() without feasibility"
+            for j in empt:
+                nodes.append(lo + int(j))
+                gpus.append(gpn)
+            seg[empt] -= gpn
+        if r:
+            cand = np.flatnonzero((seg < gpn) & (seg >= r))
+            if cand.size:
+                j = int(cand[np.lexsort((cand, seg[cand]))[0]])
+            else:
+                rest = np.flatnonzero(seg == gpn)
+                assert rest.size, "fit() without feasibility"
+                j = int(rest[0])
+            nodes.append(lo + j)
+            gpus.append(r)
+            seg[j] -= r
+        self.cfree[k] -= int(g)
+        self._dirty[k] = True
+        self.assigns.append((row, nodes, gpus))

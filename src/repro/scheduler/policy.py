@@ -85,6 +85,12 @@ import numpy as np
 from repro.core.sla import TIERS, FleetSlotAccount
 from repro.scheduler.costs import CostModel
 from repro.scheduler.job_table import TIER_CODE, JobView, shared_table
+from repro.scheduler.node_map import (
+    gang_down,
+    gang_down_vec,
+    gang_values,
+    splice_divisors,
+)
 from repro.scheduler.types import Fleet, Job
 
 DEFAULT_INTERVAL_SECONDS = 300.0
@@ -156,6 +162,11 @@ class Decision:
     # The simulator applies it with masked column writes instead of a
     # per-job Python loop; consumers that only know the mapping ignore it.
     table_update: Optional[tuple] = None
+    # node placement plan when the fleet carries a NodeMap: ``(node_map,
+    # released_rows, assigns)`` where ``assigns`` is [(row, nodes, gpus)].
+    # The simulator commits it in ``_apply``; decisions without one (the
+    # static baseline, hand-written policies) get an auto-fit span.
+    node_plan: Optional[tuple] = None
 
 
 class StaticGangPolicy:
@@ -229,6 +240,36 @@ def _greedy_take(
         tail = k + 1
         active = active[tail:]
     return gives, remaining
+
+
+def _gang_topup(
+    galloc: np.ndarray, demand: np.ndarray, prio: np.ndarray, rem: int
+) -> None:
+    """Hand gang-rounding's shavings back: climb shrunk jobs up the
+    splice-divisor ladder toward full demand while spare capacity lasts
+    (highest tier, largest grant, lowest index first).  Without this a
+    grant like 51-of-64 rounds to 32 and the 19 freed GPUs idle; with it
+    they finance the next divisor step.  In-place; candidates are only
+    jobs holding GPUs below demand, so the trip count is bounded by the
+    running-job count, not queue depth.  Both decide paths call this
+    exact routine, so grants cannot drift between them."""
+    if rem <= 0:
+        return
+    cand = np.flatnonzero((galloc > 0) & (galloc < demand))
+    if not cand.size:
+        return
+    order = cand[np.lexsort((cand, -galloc[cand], -prio[cand]))]
+    for i in order:
+        g = int(galloc[i])
+        divs = splice_divisors(int(demand[i]))
+        p = int(np.searchsorted(np.asarray(divs, np.int64), g, side="right"))
+        while p < len(divs) and divs[p] - g <= rem:
+            rem -= divs[p] - g
+            g = divs[p]
+            p += 1
+        galloc[i] = g
+        if rem <= 0:
+            break
 
 
 def _shared_ledger(accs: list):
@@ -552,6 +593,14 @@ class ElasticPolicy:
             )
             galloc[order_s] += g3
 
+        # 3b. gang/splice rounding (node-granular fleets): a grant must be
+        #     a world size the splice mechanism supports — a divisor or
+        #     multiple of demand — before placement shapes it onto nodes
+        nm = fleet.node_map
+        if nm is not None:
+            galloc = gang_down_vec(galloc, demand)
+            _gang_topup(galloc, demand, prio, int(total - galloc.sum()))
+
         # 4. enforce min_gpus (ZeRO partial-sharding floor): below it the
         #    job is preempted instead (checkpointed, zero lost work); only
         #    a job that was actually running is a preemption event
@@ -560,8 +609,8 @@ class ElasticPolicy:
         galloc[below] = 0
 
         # 5. placement
-        galloc, placed, preempt, migrate = self._place_vectorized(
-            active, table, slots, fleet, galloc, min_g, prio, running, preempt
+        galloc, placed, preempt, migrate, node_plan = self._place_vectorized(
+            active, table, slots, fleet, galloc, min_g, demand, prio, running, preempt
         )
 
         clusters = fleet.clusters()
@@ -577,6 +626,7 @@ class ElasticPolicy:
                     if table.matches_clusters(cluster_ids)
                     else None
                 ),
+                node_plan=node_plan,
             )
         ids = [j.id for j in active]
         final: Dict[str, Tuple[int, Optional[str]]] = {}
@@ -587,6 +637,7 @@ class ElasticPolicy:
             alloc=final,
             preemptions=sorted(ids[i] for i in np.flatnonzero(preempt)),
             migrations=sorted(ids[i] for i in np.flatnonzero(migrate)),
+            node_plan=node_plan,
         )
 
     def _place_vectorized(
@@ -597,16 +648,19 @@ class ElasticPolicy:
         fleet: Fleet,
         galloc: np.ndarray,
         min_g: np.ndarray,
+        demand: np.ndarray,
         prio: np.ndarray,
         running: np.ndarray,
         preempt: np.ndarray,
-    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, Optional[tuple]]:
         """Bin-pack allocations into clusters: keep placements that still
         fit, then region-aware defragmentation for the rest.
 
         The stay-put pass is a per-cluster cumsum greedy; the residual
         loop only visits jobs that actually hold GPUs, so its trip count
-        is bounded by fleet capacity, not by queue depth.
+        is bounded by fleet capacity, not by queue depth.  On a fleet
+        carrying a NodeMap, placement descends to node granularity
+        (``_place_nodes``) and the decision carries the span plan.
         """
         n = len(active)
         clusters = fleet.clusters()
@@ -630,8 +684,30 @@ class ElasticPolicy:
             )
             has_cluster = np.fromiter((j.cluster is not None for j in active), bool, n)
         jreg = np.where(jcl >= 0, creg[np.maximum(jcl, 0)], -1)
-        free = np.fromiter((c.capacity() for c in clusters), np.int64, len(clusters))
         drain = np.fromiter((c.draining for c in clusters), bool, len(clusters))
+        nm = fleet.node_map
+        if nm is not None:
+            if table is not None:
+                rows = slots  # drivers register node rows at table slots
+            else:
+                rows = np.fromiter((j.node_slot for j in active), np.int64, n)
+            return self._place_nodes(
+                nm,
+                active,
+                rows,
+                galloc,
+                min_g,
+                demand,
+                prio,
+                running,
+                preempt,
+                jcl,
+                has_cluster,
+                jreg,
+                creg,
+                drain,
+            )
+        free = np.fromiter((c.capacity() for c in clusters), np.int64, len(clusters))
         idx = np.arange(n)
         # guaranteed tiers and large allocations place first so basic
         # absorbs fragmentation
@@ -710,7 +786,198 @@ class ElasticPolicy:
                 free[k] = 0
             if running[i] and has_cluster[i] and placed[i] != jcl[i]:
                 migrate[i] = True
-        return galloc, placed, preempt, migrate
+        return galloc, placed, preempt, migrate, None
+
+    def _place_nodes(
+        self,
+        nm,
+        active: List[Job],
+        rows: np.ndarray,
+        galloc: np.ndarray,
+        min_g: np.ndarray,
+        demand: np.ndarray,
+        prio: np.ndarray,
+        running: np.ndarray,
+        preempt: np.ndarray,
+        jcl: np.ndarray,
+        has_cluster: np.ndarray,
+        jreg: np.ndarray,
+        creg: np.ndarray,
+        drain: np.ndarray,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, tuple]:
+        """Node-granular placement over a ``PlacementOverlay``.
+
+        Grants arrive gang-rounded.  An unchanged running job whose span
+        already matches keeps it untouched (zero work — the common case
+        that bounds decide time); every other span is released into the
+        overlay and re-fit: first onto the job's own cluster when a gang
+        fit exists there, then pool selection with the cluster-granular
+        preferences (healthy over draining, same-region for running
+        jobs, most aggregate free capacity, lowest index).  The fit test
+        prefers a clean gang shape — ``w`` empty nodes plus a best-fit
+        remainder hole, computed as cached segment reductions over the
+        overlay's node columns — and falls back to a scattered
+        multi-piece fill wherever the aggregate free capacity suffices
+        (legal under the device-proxy; the locality loss is what the
+        fragmentation metric and defrag pass track).  Only when no
+        cluster fits the gang even scattered does the job shrink down
+        the splice-compatible ladder into the best healthy cluster
+        (preempted below its floor).  Both decide
+        paths run this very routine on identically-derived inputs, so
+        span plans — and therefore failure blast radii — cannot drift
+        between the scalar oracle and the vectorized path."""
+        n = galloc.size
+        idx = np.arange(n)
+        order_p = np.lexsort((idx, -galloc, -prio))
+        any_drain = bool(drain.any())
+        no_stay = np.zeros(n, dtype=bool)
+        if any_drain:
+            on_draining = (
+                (jcl >= 0) & running & (galloc > 0) & drain[np.maximum(jcl, 0)]
+            )
+            for i in np.flatnonzero(on_draining):
+                no_stay[i] = self._proactive_move(active[i])
+
+        ov = nm.overlay()
+        has_span, span_k, span_tot = nm.row_state(rows)
+        placed = np.full(n, -1, dtype=np.int64)
+        migrate = np.zeros(n, dtype=bool)
+        # trivially kept: same cluster, same world size, allowed to stay
+        # -> the physical span is already correct, nothing to do
+        kept = (
+            (galloc > 0)
+            & has_span
+            & (span_k == jcl)
+            & (span_tot == galloc)
+            & ~no_stay
+        )
+        placed[kept] = jcl[kept]
+        for i in np.flatnonzero(has_span & ~kept):
+            ov.release_row(int(rows[i]))
+
+        changed = order_p[(galloc[order_p] > 0) & ~kept[order_p]]
+        fresh: dict = {}  # job index -> its entry in ov.assigns
+        # phase A (mirrors the stay-put pass): resized/restored jobs stay
+        # on their cluster when a gang fit exists there
+        staying = np.zeros(n, dtype=bool)
+        for i in changed:
+            k = int(jcl[i])
+            if (
+                k >= 0
+                and not no_stay[i]
+                and (ov.feasible(k, int(galloc[i])) or ov.cfree[k] >= galloc[i])
+            ):
+                ov.fit_any(int(rows[i]), k, int(galloc[i]))
+                placed[i] = k
+                staying[i] = True
+                fresh[int(i)] = len(ov.assigns) - 1
+        # phase B: residual pool, cluster preferences unchanged from the
+        # cluster-granular path but with gang feasibility as the fit test
+        for i in changed:
+            if staying[i]:
+                continue
+            g = int(galloc[i])
+            feas = ov.feasible_vec(g)
+            if not feas.any():
+                # no clean gang shape anywhere: scattered placement is
+                # still legal wherever the aggregate free capacity fits
+                feas = ov.cfree >= g
+            if feas.any():
+                pool = feas
+                if any_drain:
+                    nd = feas & ~drain
+                    if nd.any():
+                        pool = nd
+                if running[i] and jreg[i] >= 0:
+                    same = pool & (creg == jreg[i])
+                    if same.any():
+                        pool = same
+                k = int(np.argmax(np.where(pool, ov.cfree, -1)))
+            else:
+                # no cluster hosts the full gang even scattered: shrink
+                # down the splice ladder into the best healthy cluster
+                if any_drain and not drain.all():
+                    k = int(np.argmax(np.where(~drain, ov.cfree, -1)))
+                    v = gang_down(int(min(g, ov.cfree[k])), int(demand[i]))
+                    if v < int(min_g[i]):
+                        k = int(np.argmax(ov.cfree))
+                        v = gang_down(int(min(g, ov.cfree[k])), int(demand[i]))
+                else:
+                    k = int(np.argmax(ov.cfree))
+                    v = gang_down(int(min(g, ov.cfree[k])), int(demand[i]))
+                if v < int(min_g[i]):
+                    v = 0
+                if v == 0:
+                    galloc[i] = 0
+                    if running[i]:
+                        preempt[i] = True
+                    continue
+                galloc[i] = v
+                g = v
+            ov.fit_any(int(rows[i]), k, g)
+            placed[i] = k
+            fresh[int(i)] = len(ov.assigns) - 1
+            if running[i] and has_cluster[i] and placed[i] != jcl[i]:
+                migrate[i] = True
+        # phase C: work conservation — grow placed jobs back up their
+        # splice ladder into capacity left idle by gang rounding and
+        # shrink-to-fit, highest priority first.  Growth stays on the
+        # job's cluster (no migration; the allocation change is charged
+        # as a resize like any other).
+        left = int(ov.cfree.sum())
+        if left > 0:
+            for i in order_p:
+                if left <= 0:
+                    break
+                k = int(placed[i])
+                if k >= 0:
+                    # grow a placed job toward its demand
+                    if galloc[i] >= demand[i]:
+                        continue
+                    rem = int(ov.cfree[k])
+                    if rem <= 0:
+                        continue
+                    g = int(galloc[i])
+                    hi_v = min(int(demand[i]), g + rem)
+                    lad = gang_values(int(demand[i]), g + 1, hi_v)
+                    if not lad:
+                        continue
+                    v = int(lad[0])
+                    ii = int(i)
+                    if ii in fresh:
+                        ov.undo(fresh[ii])
+                    else:
+                        ov.release_row(int(rows[i]))
+                    ov.fit_any(int(rows[i]), k, v)
+                    fresh[ii] = len(ov.assigns) - 1
+                    galloc[i] = v
+                    left -= v - g
+                    continue
+                # admit a waiting job at the largest compatible gang the
+                # best cluster still holds (rescues grants the ledger's
+                # gang rounding zeroed below the job's floor)
+                d_i, m_i = int(demand[i]), int(min_g[i])
+                if any_drain and not drain.all():
+                    k = int(np.argmax(np.where(~drain, ov.cfree, -1)))
+                    v = gang_down(int(min(d_i, ov.cfree[k])), d_i)
+                    if v < m_i:
+                        k = int(np.argmax(ov.cfree))
+                        v = gang_down(int(min(d_i, ov.cfree[k])), d_i)
+                else:
+                    k = int(np.argmax(ov.cfree))
+                    v = gang_down(int(min(d_i, ov.cfree[k])), d_i)
+                if v <= 0 or v < m_i:
+                    continue
+                ov.fit_any(int(rows[i]), k, v)
+                fresh[int(i)] = len(ov.assigns) - 1
+                placed[i] = k
+                galloc[i] = v
+                left -= v
+                preempt[i] = False
+                if running[i] and has_cluster[i] and k != int(jcl[i]):
+                    migrate[i] = True
+        assigns = [a for a in ov.assigns if a is not None]
+        return galloc, placed, preempt, migrate, (nm, ov.released, assigns)
 
     def _proactive_move(self, j: Job) -> bool:
         """Should a running job evacuate its draining cluster now?
@@ -831,6 +1098,23 @@ class ElasticPolicy:
                     galloc[i] += give
                     used += give
 
+        # 3b. gang/splice rounding + ladder top-up, same point and same
+        #     routine as the vectorized path
+        nm = fleet.node_map
+        if nm is not None:
+            for i in range(n):
+                galloc[i] = gang_down(galloc[i], active[i].demand_gpus)
+            arr = np.asarray(galloc, np.int64)
+            _gang_topup(
+                arr,
+                np.fromiter((j.demand_gpus for j in active), np.int64, n),
+                np.fromiter(
+                    (TIERS[j.tier].preempt_priority for j in active), np.int64, n
+                ),
+                int(total - arr.sum()),
+            )
+            galloc = [int(v) for v in arr]
+
         # 4. splice floor -> preempt
         preempted = set()
         for i in range(n):
@@ -839,7 +1123,11 @@ class ElasticPolicy:
                     preempted.add(i)
                 galloc[i] = 0
 
-        # 5. placement
+        # 5. placement (node-granular when the fleet carries a NodeMap:
+        # the reference path derives the same inputs per job in Python
+        # and runs the same placement core, so span plans cannot drift)
+        if nm is not None:
+            return self._place_reference_nodes(active, fleet, nm, galloc, preempted)
         clusters = fleet.clusters()
         free = {c.id: c.capacity() for c in clusters}
         cdrain = {c.id: c.draining for c in clusters}
@@ -907,4 +1195,66 @@ class ElasticPolicy:
             alloc=final,
             preemptions=sorted(active[i].id for i in preempted),
             migrations=sorted(active[i].id for i in migrations),
+        )
+
+    def _place_reference_nodes(
+        self,
+        active: List[Job],
+        fleet: Fleet,
+        nm,
+        galloc: List[int],
+        preempted: set,
+    ) -> Decision:
+        """Reference-path entry to node placement: gather the per-job
+        state as the scalar loops see it, then run the shared placement
+        core on it."""
+        n = len(active)
+        clusters = fleet.clusters()
+        cid_index = {c.id: k for k, c in enumerate(clusters)}
+        regions = {r.id: k for k, r in enumerate(fleet.regions)}
+        creg = np.fromiter(
+            (regions[fleet.region_of(c.id)] for c in clusters),
+            np.int64,
+            len(clusters),
+        )
+        jcl = np.fromiter((cid_index.get(j.cluster, -1) for j in active), np.int64, n)
+        has_cluster = np.fromiter((j.cluster is not None for j in active), bool, n)
+        jreg = np.where(jcl >= 0, creg[np.maximum(jcl, 0)], -1)
+        drain = np.fromiter((c.draining for c in clusters), bool, len(clusters))
+        rows = np.fromiter((j.node_slot for j in active), np.int64, n)
+        g = np.asarray(galloc, np.int64)
+        min_g = np.fromiter((j.min_gpus for j in active), np.int64, n)
+        demand = np.fromiter((j.demand_gpus for j in active), np.int64, n)
+        running = np.fromiter((j.allocated > 0 for j in active), bool, n)
+        prio = np.fromiter(
+            (TIERS[j.tier].preempt_priority for j in active), np.int64, n
+        )
+        preempt = np.zeros(n, dtype=bool)
+        for i in preempted:
+            preempt[i] = True
+        g, placed, preempt, migrate, node_plan = self._place_nodes(
+            nm,
+            active,
+            rows,
+            g,
+            min_g,
+            demand,
+            prio,
+            running,
+            preempt,
+            jcl,
+            has_cluster,
+            jreg,
+            creg,
+            drain,
+        )
+        final: Dict[str, Tuple[int, Optional[str]]] = {}
+        for i in range(n):
+            cid = clusters[placed[i]].id if placed[i] >= 0 else None
+            final[active[i].id] = (int(g[i]), cid)
+        return Decision(
+            alloc=final,
+            preemptions=sorted(active[i].id for i in np.flatnonzero(preempt)),
+            migrations=sorted(active[i].id for i in np.flatnonzero(migrate)),
+            node_plan=node_plan,
         )

@@ -29,7 +29,10 @@ failure force-preempts every job intersecting the domain, rolls progress
 back to the last snapshot (the lost work is accounted as
 ``lost_work_gpu_seconds``), marks the domain's capacity dead until a
 sampled repair completes, and attributes the eventual restart downtime
-by cause.  ``ElasticPolicy`` avoids placing onto draining domains and
+by cause.  When the fleet carries a ``NodeMap`` the blast radius is
+exact: a partial-domain event kills only the jobs whose assigned node
+spans intersect the failed nodes (idle capacity absorbs the hit first),
+instead of sampling victims proportionally from the cluster's residents.  ``ElasticPolicy`` avoids placing onto draining domains and
 proactively migrates off them when the move costs less than the work it
 saves.  ``SimResult`` reports ``goodput_fraction``, ``restarts_by_cause``
 and per-tier ETTR so reliability wins are measurable.

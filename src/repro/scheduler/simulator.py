@@ -56,8 +56,9 @@ from typing import Dict, List, Optional, Tuple, Union
 import numpy as np
 
 from repro.core.sla import TIERS, FleetSLAAccounts, FleetSlotAccount, GpuFractionAccount
-from repro.scheduler.costs import CostModel, RegionTopology
-from repro.scheduler.job_table import JobTable, TableJob
+from repro.scheduler.costs import CostModel, RegionTopology, defrag_worthwhile
+from repro.scheduler.job_table import JobTable, JobView, TableJob
+from repro.scheduler.node_map import NodeMap, floor_gang
 from repro.scheduler.policy import Decision
 from repro.scheduler.reliability import CheckpointCadence, FailureModel, FailureTrace
 from repro.scheduler.types import Cluster, Fleet, Job, Region
@@ -93,6 +94,12 @@ class SimConfig:
     # the work since the last one (None = checkpoint-on-preempt-only)
     failures: Optional[Union[FailureTrace, FailureModel]] = None
     cadence: Optional[CheckpointCadence] = None
+    # node-granular placement: the simulator owns a fleet NodeMap (per-node
+    # free counts + per-job node spans), the policy plans gang-compatible
+    # spans against it, failures pick victims from the real assignments and
+    # a defragmentation pass consolidates stranded fragments.  False keeps
+    # the pre-NodeMap cluster-granular behaviour.
+    node_placement: bool = True
 
     def costs(self) -> CostModel:
         if self.cost_model is not None:
@@ -140,6 +147,11 @@ class SimResult:
     restarts_by_cause: Dict[str, int] = dataclasses.field(default_factory=dict)
     # mean seconds from a job's failure to its restart (per tier)
     ettr_by_tier: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # fragmentation accounting (zero without node placement): time-averaged
+    # free GPUs sitting in holes too small for any queued gang's smallest
+    # admissible single-node piece, and the consolidation moves made
+    fragmentation_stranded_gpus: float = 0.0
+    defrag_migrations: int = 0  # subset of ``migrations``
 
     def summary(self) -> str:
         sla = ", ".join(f"{t}={v:.3f}" for t, v in self.sla_attainment.items())
@@ -297,6 +309,22 @@ class FleetSimulator:
             # the fleet's table handle always points at the CURRENT
             # driver's table (a reused Fleet must not keep a stale one)
             fleet.jobs = table
+        # node-granular placement: the fleet NodeMap holds per-node free
+        # counts and per-job node spans (row == trace index == table
+        # slot); the policy plans spans against it, _apply commits them,
+        # and failures pick victims from the real node assignments
+        self._cluster_idx = {c.id: k for k, c in enumerate(fleet.clusters())}
+        self.defrag_migrations = 0
+        self._stranded_sum = 0.0
+        self._frag_ticks = 0
+        if self.cfg.node_placement:
+            fleet.node_map = NodeMap.from_fleet(
+                fleet, capacity_rows=max(1, len(self._jobs_list))
+            )
+            for i, j in enumerate(self._jobs_list):
+                j.node_slot = i
+        else:
+            fleet.node_map = None
         self.now = 0.0
         self.preemptions = 0
         self.migrations = 0
@@ -321,12 +349,14 @@ class FleetSimulator:
         self._ettr_n = {t: 0 for t in TIERS}
         self.failure_trace: Optional[FailureTrace] = None
         # per-cluster (time, gpus, repair) failure entries + drain warnings,
-        # consumed by advancing pointers; repairs are a (time, cid, g) heap
+        # consumed by advancing pointers; repairs are a (time, cid, amount)
+        # heap where amount is the raw GPU count (cluster-granular) or the
+        # failure's per-node claim list (node-granular)
         self._fails: List[Tuple[float, str, int, float]] = []
         self._warns: List[Tuple[float, str, float]] = []
         self._fail_ptr = 0
         self._warn_ptr = 0
-        self._repairs: List[Tuple[float, str, int]] = []
+        self._repairs: List[Tuple[float, str, object]] = []
         # outstanding failure amounts per cluster (unclamped sum): dead
         # capacity is min(total, outstanding), so overlapping failures
         # cannot resurrect capacity when the shorter one repairs first
@@ -403,13 +433,19 @@ class FleetSimulator:
 
     def _process_failures(self, active: List[Job]) -> List[Job]:
         now = self.now
+        nm = self.fleet.node_map
         # repairs due: the domain's capacity comes back — but only down
-        # to the other failures still outstanding on the same cluster
+        # to the other failures still outstanding on the same nodes
+        # (per node under a NodeMap, per cluster otherwise)
         while self._repairs and self._repairs[0][0] <= now:
             _, cid, g = heapq.heappop(self._repairs)
             c = self._cluster_by_id[cid]
-            self._outstanding[cid] = max(0, self._outstanding.get(cid, 0) - g)
-            c.dead_gpus = min(c.total_gpus, self._outstanding[cid])
+            if nm is not None:
+                nm.repair_claims(g)
+                c.dead_gpus = nm.cluster_dead(self._cluster_idx[cid])
+            else:
+                self._outstanding[cid] = max(0, self._outstanding.get(cid, 0) - g)
+                c.dead_gpus = min(c.total_gpus, self._outstanding[cid])
         # drain warnings: the policy sees the domain as draining from here
         warns = self._warns
         while self._warn_ptr < len(warns) and warns[self._warn_ptr][0] <= now:
@@ -427,9 +463,10 @@ class FleetSimulator:
         if not fired:
             return []
         by_cluster: Dict[str, List[Job]] = {}
-        for j in active:
-            if j.done_at is None and j.allocated > 0 and j.cluster is not None:
-                by_cluster.setdefault(j.cluster, []).append(j)
+        if nm is None:
+            for j in active:
+                if j.done_at is None and j.allocated > 0 and j.cluster is not None:
+                    by_cluster.setdefault(j.cluster, []).append(j)
         changed: List[Job] = []
         for e_time, cid, gpus, repair in fired:
             c = self._cluster_by_id[cid]
@@ -437,35 +474,54 @@ class FleetSimulator:
             # repair is anchored to the FAILURE time, not the processing
             # tick; a sub-tick outage (already repaired) still kills its
             # victims but never marks capacity dead.  The UNCLAMPED
-            # amount joins the cluster's outstanding sum so overlapping
-            # failures never resurrect capacity early (dead capacity is
+            # amount joins the outstanding sum so overlapping failures
+            # never resurrect capacity early (dead capacity is
             # min(total, outstanding) until each failure's own repair).
-            if e_time + repair > now and want > 0:
-                self._outstanding[cid] = self._outstanding.get(cid, 0) + want
-                c.dead_gpus = min(c.total_gpus, self._outstanding[cid])
-                heapq.heappush(self._repairs, (e_time + repair, cid, want))
+            if nm is not None:
+                # node-granular: the failure claims specific nodes, dead
+                # capacity and victims both come from the real node
+                # assignments — a job dies iff it holds a piece of a
+                # node the claim actually takes capacity from
+                k = self._cluster_idx[cid]
+                claims = nm.fail_claims(k, want) if want > 0 else []
+                vrows = nm.apply_claims(claims)
+                if e_time + repair > now and want > 0:
+                    heapq.heappush(self._repairs, (e_time + repair, cid, claims))
+                else:
+                    # sub-tick outage: victims died, capacity is back
+                    nm.repair_claims(claims)
+                c.dead_gpus = nm.cluster_dead(k)
+                victims = [self._jobs_list[r] for r in vrows]
+            else:
+                if e_time + repair > now and want > 0:
+                    self._outstanding[cid] = self._outstanding.get(cid, 0) + want
+                    c.dead_gpus = min(c.total_gpus, self._outstanding[cid])
+                    heapq.heappush(self._repairs, (e_time + repair, cid, want))
+                # victims without a NodeMap fall back to the packing-order
+                # approximation: jobs pack the cluster in (arrival, id)
+                # order; a partial failure of W GPUs takes out every job
+                # overlapping the first W.
+                pool = sorted(
+                    by_cluster.get(cid, []), key=lambda j: (j.arrival, j.id)
+                )
+                if want >= c.total_gpus:
+                    victims = list(pool)
+                else:
+                    victims, cum = [], 0
+                    for j in pool:
+                        if cum >= want:
+                            break
+                        victims.append(j)
+                        cum += j.allocated
+                if victims:
+                    vset = set(id(v) for v in victims)
+                    by_cluster[cid] = [j for j in pool if id(j) not in vset]
             if c.draining and e_time >= c.drain_deadline - 1e-9:
                 # the warned drain itself fired: dead capacity takes over.
                 # An unrelated failure inside the warning window must NOT
                 # cancel the drain — evacuation continues to the deadline.
                 c.draining = False
             self.failure_events += 1
-            # victims: jobs whose devices intersect the failed span.  Jobs
-            # pack the cluster in (arrival, id) order; a partial failure
-            # of W GPUs takes out every job overlapping the first W.
-            pool = sorted(by_cluster.get(cid, []), key=lambda j: (j.arrival, j.id))
-            if want >= c.total_gpus:
-                victims = list(pool)
-            else:
-                victims, cum = [], 0
-                for j in pool:
-                    if cum >= want:
-                        break
-                    victims.append(j)
-                    cum += j.allocated
-            if victims:
-                vset = set(id(v) for v in victims)
-                by_cluster[cid] = [j for j in pool if id(j) not in vset]
             for j in victims:
                 lost = max(0.0, j.progress - j.snap_progress)
                 self.lost_work_gpu_seconds += lost * j.gpu_hours * 3600.0
@@ -556,8 +612,175 @@ class FleetSimulator:
                 if self._reliability:
                     j.snap_progress = j.progress
                     j.snap_time = self.now
+        self._commit_node_plan(decision)
         if self.cfg.validate and not fast:
             self._check_capacity(decision)
+        if self.cfg.validate:
+            self._check_nodes()
+
+    def _commit_node_plan(self, decision: Decision) -> None:
+        """Write the decision's node spans into the NodeMap.  Policies
+        that planned placement hand over (node map, released rows,
+        assigned pieces) — committed verbatim, releases first, so spans
+        are exactly what the decide pass saw.  Planless decisions (the
+        static gang baseline, hand-written policies) are resynced with a
+        greedy auto-fit per changed job; its per-node conservation
+        assert rejects over-allocating policies below cluster
+        granularity too."""
+        nm = self.fleet.node_map
+        if nm is None:
+            return
+        plan = decision.node_plan
+        if plan is not None and plan[0] is nm:
+            _, released, assigns = plan
+            for row in released:
+                nm.release(row)
+            for row, nodes, gpus in assigns:
+                nm.assign(row, nodes, gpus)
+            return
+        for jid, (g, cid) in decision.alloc.items():
+            j = self.jobs[jid]
+            if j.done_at is not None:
+                continue
+            row = j.node_slot
+            if row < 0:
+                continue
+            g = int(g)
+            k = self._cluster_idx.get(cid, -1) if cid is not None else -1
+            if nm.span_total(row) == g and (g == 0 or nm.span_cluster(row) == k):
+                continue
+            nm.release(row)
+            if g > 0:
+                assert k >= 0, f"{jid}: allocated without a cluster"
+                nm.auto_fit(row, k, g)
+        for jid in decision.preemptions:
+            j = self.jobs[jid]
+            if j.done_at is None and j.allocated == 0:
+                nm.release(j.node_slot)
+
+    def _check_nodes(self) -> None:
+        """Per-node conservation, asserted every tick in both event
+        loops: free + used + dead == cap on every node, the span pool
+        agrees with the per-node used counts, and each live job's span
+        sums to exactly its allocation (no span without an allocation,
+        no allocation without a span)."""
+        nm = self.fleet.node_map
+        if nm is None:
+            return
+        nm.check()
+        rows = nm.live_rows()
+        n = len(self._jobs_list)
+        assert rows.size == 0 or int(rows.max()) < n, "span row out of range"
+        if self._table is not None:
+            alloc = self._table.allocated[:n]
+        else:
+            alloc = np.fromiter(
+                (
+                    0 if j.done_at is not None else j.allocated
+                    for j in self._jobs_list
+                ),
+                np.int64,
+                n,
+            )
+        held = np.zeros(n, np.int64)
+        held[rows] = nm.row_total[rows]
+        bad = np.flatnonzero(held != alloc)
+        assert bad.size == 0, (
+            f"job {self._jobs_list[bad[0]].id}: node span holds "
+            f"{held[bad[0]]} GPUs but allocation is {alloc[bad[0]]}"
+        )
+
+    # -- fragmentation + defragmentation ---------------------------------------
+    def _frag_defrag_tick(self, active) -> None:
+        """Post-decision fragmentation accounting and (at most) one
+        defragmentation move: free GPUs in holes smaller than any queued
+        gang's smallest admissible single-node piece are *stranded*;
+        when emptying one full node would turn a shape-infeasible queued
+        floor feasible and the freed capacity is worth the charged
+        migration downtime, consolidate that node's pieces into best-fit
+        holes elsewhere in the cluster."""
+        nm = self.fleet.node_map
+        if nm is None:
+            return
+        if isinstance(active, JobView):
+            t = self._table
+            slots = active.slots
+            qs = slots[t.allocated[slots] == 0]
+            shapes = {
+                (int(d), int(m))
+                for d, m in zip(t.demand_gpus[qs], t.min_gpus[qs])
+            }
+        else:
+            shapes = {
+                (j.demand_gpus, j.min_gpus)
+                for j in active
+                if j.done_at is None and j.allocated == 0
+            }
+        self._stranded_sum += nm.stranded_gpus(sorted(shapes))
+        self._frag_ticks += 1
+        if not shapes or getattr(self.policy, "name", "") == "static":
+            return  # static never migrates; nothing queued = nothing stranded
+        floors = sorted(
+            {f for f in (floor_gang(d, m) for d, m in shapes) if f > 0}
+        )
+        if floors:
+            self._maybe_defrag(nm, floors)
+
+    def _maybe_defrag(self, nm: NodeMap, floors: List[int]) -> None:
+        ov = nm.overlay()
+        for k in range(nm.n_clusters):
+            gpn = int(nm.cluster_gpn[k])
+            for f in floors:
+                w, r = divmod(f, gpn)
+                if int(ov.cfree[k]) < f or ov.feasible(k, f):
+                    continue  # hopeless or already feasible as-is
+                empty, maxp = ov._stats(k)
+                if not (empty + 1 >= w and (r == 0 or maxp >= r or empty + 1 >= w + 1)):
+                    continue  # one consolidated node would not unblock it
+                if self._defrag_cluster(nm, k):
+                    return  # at most one consolidation per tick
+                break  # no movable node here; try the next cluster
+
+    def _defrag_cluster(self, nm: NodeMap, k: int) -> bool:
+        """Empty one full-capacity node of cluster ``k`` into best-fit
+        holes on other occupied nodes, gated by ``defrag_worthwhile``.
+        Each moved job is charged exactly one intra-region migration."""
+        lo, hi = int(nm.cluster_lo[k]), int(nm.cluster_hi[k])
+        gpn = int(nm.cluster_gpn[k])
+        cap = nm.node_cap[lo:hi]
+        used = nm.node_used[lo:hi]
+        free = nm.node_free[lo:hi]
+        dead = np.minimum(cap, nm.node_out[lo:hi])
+        src = np.flatnonzero((cap == gpn) & (dead == 0) & (used > 0) & (free > 0))
+        src = src[np.lexsort((src, used[src]))]  # cheapest to empty first
+        idx = np.arange(cap.size)
+        for a in src:
+            need = int(used[a])
+            tgt = np.flatnonzero((free >= need) & (used > 0) & (idx != a))
+            if not tgt.size:
+                continue
+            b = lo + int(tgt[np.lexsort((tgt, free[tgt]))[0]])  # best fit
+            rows = nm.rows_on_node(lo + int(a))
+            movers = [self._jobs_list[int(r)] for r in rows]
+            if not defrag_worthwhile(
+                self.costs,
+                [j.checkpoint_bytes for j in movers],
+                gpn,
+                self.cfg.tick_seconds,
+            ):
+                continue
+            for row, j in zip(rows, movers):
+                nm.move_piece(int(row), lo + int(a), b)
+                j.migrations += 1
+                self.migrations += 1
+                self.defrag_migrations += 1
+                self._charge(j, self.costs.migrate_seconds(j.checkpoint_bytes))
+                if self._reliability:
+                    # the migration round trip checkpoints state
+                    j.snap_progress = j.progress
+                    j.snap_time = self.now
+            return True
+        return False
 
     def _apply_table(
         self, slots: np.ndarray, gpus: np.ndarray, placed: np.ndarray
@@ -744,6 +967,8 @@ class FleetSimulator:
                         j.done_at = end
                         j.allocated = 0
                         _release_account(j)
+                        if self.fleet.node_map is not None:
+                            self.fleet.node_map.release(j.node_slot)
                         if isinstance(j, TableJob):
                             j._table.detach(j)
             else:
@@ -772,6 +997,7 @@ class FleetSimulator:
                 self._tick_reliability([j for j in arrived if j.done_at is None])
             decision = self.policy.decide(self.now, arrived, self.fleet)
             self._apply(decision)
+            self._frag_defrag_tick(arrived)
 
     # ==================== vectorized event loop ===============================
 
@@ -878,6 +1104,10 @@ class FleetSimulator:
         if done_now.size:
             self._done[done_now] = True
             self._alloc[done_now] = 0
+            nm = self.fleet.node_map
+            if nm is not None:
+                for i in done_now:
+                    nm.release(int(i))  # row == trace index
             if self._table is not None:
                 # release-on-completion: final state is written to the
                 # columns, then the tick's finishers detach in one batch
@@ -945,6 +1175,7 @@ class FleetSimulator:
                             self._downtime_until[i] = j.downtime_until
                 decision = self.policy.decide(t, active_jobs, self.fleet)
                 self._apply(decision)
+                self._frag_defrag_tick(active_jobs)
                 if self._table is None:
                     for i in act:
                         self._alloc[i] = jobs[i].allocated
@@ -1032,4 +1263,8 @@ class FleetSimulator:
                 for t in TIERS
                 if self._ettr_n[t] > 0
             },
+            fragmentation_stranded_gpus=(
+                self._stranded_sum / self._frag_ticks if self._frag_ticks else 0.0
+            ),
+            defrag_migrations=self.defrag_migrations,
         )

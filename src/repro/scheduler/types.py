@@ -7,8 +7,9 @@ from typing import TYPE_CHECKING, List, Optional
 from repro.core.sla import TIERS, FleetSLAAccounts, GpuFractionAccount, SLAAccount
 from repro.scheduler.costs import RegionTopology, default_checkpoint_bytes
 
-if TYPE_CHECKING:  # avoid the import cycle: job_table views Job
+if TYPE_CHECKING:  # avoid the import cycle: job_table/node_map view Job
     from repro.scheduler.job_table import JobTable
+    from repro.scheduler.node_map import NodeMap
 
 
 @dataclasses.dataclass
@@ -36,6 +37,18 @@ class Cluster:
 
     def nodes(self) -> int:
         return max(1, -(-self.total_gpus // max(self.gpus_per_node, 1)))
+
+    def node_capacities(self) -> List[int]:
+        """Per-node GPU counts.  Ceil division used to pad a trailing
+        partial node up to ``gpus_per_node``; the node vector keeps its
+        TRUE smaller capacity so placement and failure blast radius see
+        the hardware that exists."""
+        gpn = max(self.gpus_per_node, 1)
+        full, rem = divmod(self.total_gpus, gpn)
+        caps = [gpn] * full
+        if rem or not caps:
+            caps.append(rem)
+        return caps
 
     def capacity(self) -> int:
         """GPUs currently healthy (total minus failed-out capacity)."""
@@ -70,6 +83,10 @@ class Fleet:
     topology: Optional[RegionTopology] = None
     sla: Optional[FleetSLAAccounts] = None
     jobs: Optional["JobTable"] = None
+    # node-granular placement state owned by the current driver (None =
+    # cluster-granular placement only, the pre-NodeMap behaviour); the
+    # policy plans node spans exactly when this is attached
+    node_map: Optional["NodeMap"] = None
 
     def total(self) -> int:
         return sum(r.total() for r in self.regions)
@@ -131,6 +148,11 @@ class Job:
     # wall time this job last entered the queue (arrival, or the moment
     # of its last preemption); the policy's fairness aging reads it
     queued_since: float = -1.0
+    # NodeMap row holding this job's node span (-1 = no driver assigned
+    # one); set once by the simulator/executor, stable across the job's
+    # lifetime — deliberately NOT a JobTable column, so it survives
+    # adopt/detach untouched
+    node_slot: int = -1
 
     # cost accounting (set by the simulator's cost model)
     downtime_until: float = 0.0  # no progress before this wall time

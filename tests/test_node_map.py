@@ -1,0 +1,355 @@
+"""NodeMap property suite: gang arithmetic, per-node conservation, slot
+lifecycle, failure blast radii, and node-granular decision equivalence.
+
+The NodeMap is the simulator-owned source of truth for which nodes every
+job's gang actually occupies.  These tests pin the contracts the rest of
+the scheduler builds on:
+
+- gang/splice arithmetic: ``gang_down`` always lands on a compatible
+  world size (a divisor or multiple of the demand), the vectorized
+  variant agrees with the scalar one, and ``min_piece``/``floor_gang``
+  derive from the same ladder;
+- per-node conservation (``free + used + dead == cap``) survives
+  arbitrary interleavings of span assignment, release, failure claims
+  and repairs — and the fleet returns to full strength afterwards;
+- row slots grow by doubling, are reused after release, and surviving
+  spans are byte-identical across pool compaction;
+- a node failure kills exactly the jobs with pieces on the failed
+  node — free capacity dies first, then rows in ascending order — and
+  jobs elsewhere are untouched;
+- with node placement on, the vectorized and scalar reference decide
+  paths emit identical decisions AND identical span plans, storm
+  included (per-node conservation asserted every tick via validate).
+"""
+
+import hashlib
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.scheduler.costs import CostModel
+from repro.scheduler.node_map import (
+    NodeMap,
+    floor_gang,
+    gang_down,
+    gang_down_vec,
+    gang_values,
+    min_piece,
+    splice_divisors,
+)
+from repro.scheduler.policy import ElasticPolicy
+from repro.scheduler.reliability import FailureModel, FailureTrace
+from repro.scheduler.simulator import (
+    FleetSimulator,
+    SimConfig,
+    make_fleet,
+    synth_workload,
+)
+from repro.scheduler.types import Cluster, Fleet, Region
+
+
+def _compatible(demand: int, upto: int = 400) -> set:
+    vals = set(splice_divisors(demand))
+    vals.update(m * demand for m in range(1, upto // demand + 2))
+    return vals
+
+
+# ------------------------------------------------------ gang arithmetic
+@settings(max_examples=200, deadline=None)
+@given(g=st.integers(0, 160), demand=st.integers(1, 96))
+def test_gang_down_lands_on_largest_compatible(g, demand):
+    v = gang_down(g, demand)
+    compat = _compatible(demand)
+    if v:
+        assert v in compat and v <= g
+        assert not any(c for c in compat if v < c <= g)
+    else:
+        assert not any(c for c in compat if 0 < c <= g)
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 64))
+def test_gang_down_vec_matches_scalar(seed, n):
+    rng = np.random.Generator(np.random.Philox(seed))
+    demand = rng.integers(1, 96, n)
+    galloc = rng.integers(0, 160, n)
+    vec = gang_down_vec(galloc.astype(np.int64), demand.astype(np.int64))
+    ref = np.array([gang_down(int(g), int(d)) for g, d in zip(galloc, demand)])
+    assert (vec == ref).all()
+
+
+@settings(max_examples=100, deadline=None)
+@given(demand=st.integers(1, 96), min_gpus=st.integers(1, 96))
+def test_floor_gang_is_smallest_admissible(demand, min_gpus):
+    v = floor_gang(demand, min_gpus)
+    assert v >= min_gpus
+    assert v in _compatible(demand)
+    assert not any(c for c in _compatible(demand) if min_gpus <= c < v)
+
+
+def test_min_piece_tracks_node_size():
+    # 16-GPU gangs on 8-GPU nodes split as 8+8: nothing smaller than a
+    # full node ever lands, so a 7-GPU hole is useless to them
+    assert min_piece(16, 8, 8) == 8
+    # but a job that can shrink to tiny divisors can use any hole
+    assert min_piece(4, 1, 8) == 1
+    # a 12-GPU gang leaves a 4-GPU remainder piece
+    assert min_piece(12, 12, 8) == 4
+
+
+def test_trailing_partial_node_keeps_true_capacity():
+    c = Cluster("c0", "r0", 20, gpus_per_node=8)
+    assert list(c.node_capacities()) == [8, 8, 4]
+    fleet = Fleet([Region("r0", [c])])
+    nm = NodeMap.from_fleet(fleet)
+    assert list(nm.node_cap) == [8, 8, 4]
+    assert int(nm.cluster_free_vector()[0]) == 20
+
+
+# ------------------------------------------- conservation under chaos
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 100_000), n_ops=st.integers(1, 120))
+def test_conservation_under_random_ops(seed, n_ops):
+    """free + used + dead == cap per node after every operation, and the
+    fleet returns to full strength once every span is released and every
+    failure repaired."""
+    rng = np.random.Generator(np.random.Philox(seed))
+    fleet = Fleet(
+        [
+            Region(
+                "r0",
+                [
+                    Cluster("r0c0", "r0", 48, gpus_per_node=8),
+                    Cluster("r0c1", "r0", 20, gpus_per_node=8),
+                ],
+            )
+        ]
+    )
+    nm = NodeMap.from_fleet(fleet, capacity_rows=2)
+    live: set = set()
+    outstanding: list = []
+    next_row = 0
+    for _ in range(n_ops):
+        op = int(rng.integers(0, 4))
+        if op == 0:  # place a new span wherever capacity exists
+            k = int(rng.integers(0, nm.n_clusters))
+            free = int(nm.cluster_free_vector()[k])
+            if free > 0:
+                g = int(rng.integers(1, free + 1))
+                nm.auto_fit(next_row, k, g)
+                live.add(next_row)
+                next_row += 1
+        elif op == 1 and live:  # release a random live span
+            row = int(rng.choice(sorted(live)))
+            nm.release(row)
+            live.discard(row)
+        elif op == 2:  # fail part (or all) of a cluster
+            k = int(rng.integers(0, nm.n_clusters))
+            want = int(rng.integers(1, 49))
+            claims = nm.fail_claims(k, want)
+            victims = nm.apply_claims(claims)
+            live.difference_update(victims)
+            outstanding.append(claims)
+        elif op == 3 and outstanding:  # repair a random failure
+            idx = int(rng.integers(0, len(outstanding)))
+            nm.repair_claims(outstanding.pop(idx))
+        nm.check()
+        # row bookkeeping matches the span pool at every step
+        for row in live:
+            assert nm.span_total(row) > 0
+    for claims in outstanding:
+        nm.repair_claims(claims)
+    for row in sorted(live):
+        nm.release(row)
+    nm.check()
+    assert (nm.node_free == nm.node_cap).all()
+    assert nm.live_rows().size == 0
+
+
+# -------------------------------------------------- slot/pool lifecycle
+def test_row_growth_reuse_and_compaction():
+    fleet = Fleet([Region("r0", [Cluster("r0c0", "r0", 4096, gpus_per_node=8)])])
+    nm = NodeMap.from_fleet(fleet, capacity_rows=1)
+    for row in range(200):  # forces repeated doubling of the row arrays
+        nm.auto_fit(row, 0, 16)
+        nm.check()
+    assert nm.row_len.size >= 200
+    before = {
+        row: (nm.row_pieces(row)[0].copy(), nm.row_pieces(row)[1].copy())
+        for row in range(1, 200, 2)
+    }
+    for row in range(0, 200, 2):  # > half the pool becomes garbage ...
+        nm.release(row)
+    for row in range(0, 200, 2):  # ... and reuse triggers compaction
+        nm.auto_fit(row, 0, 8)
+        nm.check()
+    for row, (nodes, gpus) in before.items():  # survivors are untouched
+        n2, g2 = nm.row_pieces(row)
+        assert (n2 == nodes).all() and (g2 == gpus).all()
+    assert int(nm.row_total[:200].sum()) == 100 * 16 + 100 * 8
+    nm.check()
+
+
+# ------------------------------------------------- failure blast radius
+def test_node_failure_kills_exactly_mapped_rows():
+    fleet = Fleet([Region("r0", [Cluster("r0c0", "r0", 64, gpus_per_node=8)])])
+    nm = NodeMap.from_fleet(fleet)
+    # rows 0..3 each take a full node; packing is lowest-index greedy
+    for row in range(4):
+        nm.auto_fit(row, 0, 8)
+    assert list(nm.rows_on_node(1)) == [1]
+    # an 8-GPU partial failure claims node 0's capacity first: with no
+    # free GPUs on it, exactly row 0 dies
+    claims = nm.fail_claims(0, 8)
+    assert claims == [(0, 8)]
+    victims = nm.apply_claims(claims)
+    assert victims == [0]
+    for row in (1, 2, 3):  # everyone else keeps their span
+        assert nm.span_total(row) == 8
+    nm.check()
+    nm.repair_claims(claims)
+    nm.check()
+    assert int(nm.node_free[0]) == 8
+
+
+def test_partial_failure_eats_free_capacity_before_jobs():
+    fleet = Fleet([Region("r0", [Cluster("r0c0", "r0", 64, gpus_per_node=8)])])
+    nm = NodeMap.from_fleet(fleet)
+    nm.assign(0, [0], [4])  # node 0: 4 used, 4 free
+    victims = nm.apply_claims(nm.fail_claims(0, 4))
+    assert victims == []  # the free half dies, the job survives
+    assert nm.span_total(0) == 4
+    victims = nm.apply_claims(nm.fail_claims(0, 2))
+    assert victims == [0]  # now the job must die; its whole gang goes
+    nm.check()
+
+
+def test_whole_cluster_failure_kills_every_resident():
+    fleet = Fleet(
+        [
+            Region(
+                "r0",
+                [
+                    Cluster("r0c0", "r0", 32, gpus_per_node=8),
+                    Cluster("r0c1", "r0", 32, gpus_per_node=8),
+                ],
+            )
+        ]
+    )
+    nm = NodeMap.from_fleet(fleet)
+    nm.auto_fit(0, 0, 12)
+    nm.auto_fit(1, 0, 12)
+    nm.auto_fit(2, 1, 12)
+    victims = nm.apply_claims(nm.fail_claims(0, 32))
+    assert sorted(victims) == [0, 1]
+    assert nm.span_total(2) == 12  # the other cluster is untouched
+    assert nm.cluster_dead(0) == 32
+    nm.check()
+
+
+# --------------------------------- decide-path equivalence, storm included
+class _PlanDigestPolicy:
+    """Hashes every decision INCLUDING its node span plan, so the
+    equivalence gate catches span-level drift the alloc map would hide."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.name = inner.name
+        self.digest = hashlib.sha256()
+
+    def bind_costs(self, cost_model, interval_hint):
+        self.inner.bind_costs(cost_model, interval_hint)
+
+    def decide(self, now, jobs, fleet):
+        decision = self.inner.decide(now, jobs, fleet)
+        plan = decision.node_plan
+        spans = None
+        if plan is not None:
+            _, released, assigns = plan
+            spans = (
+                sorted(released),
+                [(r, list(n), list(g)) for r, n, g in assigns],
+            )
+        self.digest.update(
+            repr(
+                (
+                    sorted(decision.alloc.items()),
+                    decision.preemptions,
+                    decision.migrations,
+                    spans,
+                )
+            ).encode()
+        )
+        return decision
+
+
+def _node_storm_run(vectorized: bool, job_table: bool) -> tuple:
+    fleet = make_fleet(n_regions=2, clusters_per_region=2, gpus_per_cluster=256)
+    storm = FailureTrace.merge(
+        FailureModel(
+            device_mtbf_seconds=10 * 24 * 3600.0,
+            node_mtbf_seconds=15 * 24 * 3600.0,
+            cluster_mtbf_seconds=45 * 24 * 3600.0,
+            seed=11,
+        ).sample(fleet, 12 * 3600.0),
+        FailureTrace.cluster_outage("r0c0", at=4 * 3600.0),
+    )
+    wrapper = _PlanDigestPolicy(ElasticPolicy(vectorized=vectorized))
+    sim = FleetSimulator(
+        fleet,
+        synth_workload(80, fleet.total(), seed=5, mean_interarrival=180.0),
+        wrapper,
+        SimConfig(
+            horizon_seconds=12 * 3600.0,
+            cost_model=CostModel(),
+            failures=storm,
+            validate=True,  # per-node conservation asserted every tick
+            job_table=job_table,
+        ),
+    )
+    res = sim.run()
+    return res, wrapper.digest.hexdigest()
+
+
+def test_scalar_equals_vectorized_span_plans_under_storm():
+    res_v, dig_v = _node_storm_run(vectorized=True, job_table=True)
+    res_p, dig_p = _node_storm_run(vectorized=True, job_table=False)
+    res_s, dig_s = _node_storm_run(vectorized=False, job_table=True)
+    assert res_v.job_failures > 0  # the storm actually stormed
+    assert dig_v == dig_p == dig_s
+    assert res_v.utilization == res_p.utilization == res_s.utilization
+    assert (
+        (res_v.preemptions, res_v.migrations, res_v.resizes)
+        == (res_p.preemptions, res_p.migrations, res_p.resizes)
+        == (res_s.preemptions, res_s.migrations, res_s.resizes)
+    )
+
+
+def test_calm_sea_span_plans_match_too():
+    """Equivalence with failures OFF: the plain workload must also walk
+    identical span plans down both decide paths."""
+    digests = {}
+    for vec in (True, False):
+        fleet = make_fleet(n_regions=2, clusters_per_region=2, gpus_per_cluster=256)
+        wrapper = _PlanDigestPolicy(ElasticPolicy(vectorized=vec))
+        sim = FleetSimulator(
+            fleet,
+            synth_workload(60, fleet.total(), seed=2, mean_interarrival=240.0),
+            wrapper,
+            SimConfig(horizon_seconds=8 * 3600.0, validate=True),
+        )
+        sim.run()
+        digests[vec] = wrapper.digest.hexdigest()
+    assert digests[True] == digests[False]
+
+
+# ------------------------------------------------------- fragmentation
+def test_stranded_gpus_counts_unusable_holes():
+    fleet = Fleet([Region("r0", [Cluster("r0c0", "r0", 16, gpus_per_node=8)])])
+    nm = NodeMap.from_fleet(fleet)
+    nm.assign(0, [0], [5])  # node 0 keeps a 3-GPU hole
+    # a 16-GPU gang only ever lands in full-node pieces: the hole is dead
+    assert nm.stranded_gpus([(16, 8)]) == 3
+    # a job that can shrink to 1 GPU can use it: nothing stranded
+    assert nm.stranded_gpus([(16, 8), (4, 1)]) == 0
+    assert nm.stranded_gpus([]) == 0
