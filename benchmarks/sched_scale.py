@@ -82,6 +82,7 @@ from typing import Dict, List, Optional
 from repro.scheduler.costs import CostModel
 from repro.scheduler.policy import ElasticPolicy
 from repro.scheduler.reliability import CheckpointCadence, FailureModel, FailureTrace
+from repro.scheduler.serving import ServiceSpec, ServingConfig, TrafficConfig
 from repro.scheduler.simulator import (
     FleetSimulator,
     SimConfig,
@@ -345,6 +346,218 @@ def bench_failures(
 # catch a reintroduced per-job gather (a multi-x regression), not noise
 DECIDE_BUDGET_FACTOR = 2.0
 
+# -- serving row ----------------------------------------------------------
+# the mixed-workload acceptance bar: fraction of per-service scheduler
+# windows meeting p99 latency via sufficient warm replicas
+SERVING_SLO_GATE = 0.99
+SERVING_TRAFFIC_SEED = 9
+# the serving row replaces the bursty base trace with one spanning the
+# full 24h serving day at this oversubscription factor (x the ~80% base
+# operating point): the training backlog then persists all day, so GPUs
+# loaned off-peak are visible as best-effort throughput, not absorbed by
+# an already-drained queue
+SERVING_HORIZON = 24 * 3600.0
+SERVING_TRAINING_LOAD = 1.4
+# gate-failure artifact: the full qps trace plus per-service attainment,
+# so a CI failure is debuggable without re-running the bench
+SERVING_TRACE_JSON = "SERVING_trace.json"
+# (service, arch, slo_ms, diurnal peak qps): operating points derived
+# from the real model configs via ReplicaProfile.from_config, with peaks
+# sized so the reserved quota lands at ~13% of the 65,536-GPU bench fleet
+SERVING_MIX = [
+    ("chat", "yi-9b", 40.0, 44000.0),
+    ("code", "granite-8b", 40.0, 24000.0),
+    ("agent", "qwen3-moe-30b-a3b", 50.0, 36000.0),
+    ("embed", "olmo-1b", 30.0, 72000.0),
+]
+
+
+def _serving_services() -> List[ServiceSpec]:
+    from repro.configs import get_config
+    from repro.serving.engine import ReplicaProfile
+
+    return [
+        ServiceSpec(
+            name,
+            ReplicaProfile.from_config(get_config(arch), slo_ms=slo),
+            peak_qps=peak,
+        )
+        for name, arch, slo, peak in SERVING_MIX
+    ]
+
+
+def _serving_signature(res) -> Dict:
+    return {
+        "serving_windows": res.serving_windows,
+        "serving_violations": res.serving_violations,
+        "serving_reclaims": res.serving_reclaims,
+        "serving_loaned_gpu_hours": round(res.serving_loaned_gpu_hours, 6),
+    }
+
+
+def bench_serving(
+    n_jobs: int,
+    regions: int,
+    clusters_per_region: int,
+    gpus_per_cluster: int,
+    check_equivalence: bool,
+) -> Dict:
+    """Serving row: mix a 24h diurnal+spike inference trace (four real
+    model operating points) into the training trace and gate the elastic
+    serving tier's acceptance criteria:
+
+    * p99 SLO attainment >= ``SERVING_SLO_GATE`` over all scheduler
+      windows, with the predictive autoscaler never behind the reactive
+      baseline;
+    * every reclaim (spike retarget clawing back loaned GPUs) lands
+      within the CostModel-charged deadline;
+    * loaning is real: loaned GPU-hours > 0 AND best-effort training
+      banks more busy GPU-hours than the no-loaning baseline (idle
+      reserved capacity converted to training throughput, not just
+      moved);
+    * (with ``--check-equivalence``) all four {JobTable, plain jobs} x
+      {vectorized, scalar} combinations replay the same decision digest
+      with services active.
+
+    On any gate failure the full qps trace and per-service attainment
+    are dumped to ``SERVING_trace.json`` for offline debugging.
+    """
+
+    def _run(autoscaler: str, loaning: bool, vec=True, jt=True, digest=False):
+        fleet = _fleet(regions, clusters_per_region, gpus_per_cluster)
+        inter = SERVING_HORIZON / n_jobs
+        work = (
+            WORK_SCALE * (inter / _interarrival(fleet.total())) * SERVING_TRAINING_LOAD
+        )
+        jobs = synth_workload(
+            n_jobs,
+            fleet.total(),
+            seed=SEED,
+            mean_interarrival=inter,
+            work_scale=work,
+        )
+        scfg = ServingConfig(
+            services=_serving_services(),
+            traffic=TrafficConfig(seed=SERVING_TRAFFIC_SEED),
+            autoscaler=autoscaler,
+            loaning=loaning,
+        )
+        policy = _TimedPolicy(ElasticPolicy(vectorized=vec), digest=digest)
+        sim = FleetSimulator(
+            fleet,
+            jobs,
+            policy,
+            SimConfig(horizon_seconds=SERVING_HORIZON, job_table=jt, serving=scfg),
+        )
+        res = sim.run()
+        return res, sim, policy
+
+    t0 = time.perf_counter()
+    res, sim, policy = _run("predictive", loaning=True)
+    react, _, _ = _run("reactive", loaning=True)
+    noloan, sim_n, _ = _run("predictive", loaning=False)
+    wall = time.perf_counter() - t0
+    training = sim.busy_gpu_seconds / 3600.0 - res.serving_gpu_hours
+    training_noloan = sim_n.busy_gpu_seconds / 3600.0 - noloan.serving_gpu_hours
+    out = {
+        "services": [
+            {"name": n, "arch": a, "slo_ms": s, "peak_qps": p}
+            for n, a, s, p in SERVING_MIX
+        ],
+        "traffic_seed": SERVING_TRAFFIC_SEED,
+        "wall_seconds": wall,
+        "reserved_gpus": res.serving_reserved_gpus,
+        "slo_attainment": res.serving_slo_attainment,
+        "slo_gate_threshold": SERVING_SLO_GATE,
+        "attainment_by_service": res.serving_attainment_by_service,
+        "windows": res.serving_windows,
+        "violations": res.serving_violations,
+        "reclaims": res.serving_reclaims,
+        "reclaim_mean_seconds": res.serving_reclaim_mean_seconds,
+        "reclaim_max_seconds": res.serving_reclaim_max_seconds,
+        "reclaim_deadline_seconds": res.serving_reclaim_deadline_seconds,
+        "reclaims_over_deadline": res.serving_reclaims_over_deadline,
+        "loaned_gpu_hours": res.serving_loaned_gpu_hours,
+        "serving_gpu_hours": res.serving_gpu_hours,
+        "training_busy_gpu_hours": training,
+        "reactive_slo_attainment": react.serving_slo_attainment,
+        "noloan_slo_attainment": noloan.serving_slo_attainment,
+        "noloan_training_busy_gpu_hours": training_noloan,
+        "loaning_training_gain_gpu_hours": training - training_noloan,
+        "completed_jobs": res.completed,
+        "noloan_completed_jobs": noloan.completed,
+        "equivalence": "skipped",
+    }
+    gates = {
+        "slo": res.serving_slo_attainment >= SERVING_SLO_GATE,
+        "reclaim": res.serving_reclaims_over_deadline == 0,
+        "predictive_vs_reactive": (
+            res.serving_slo_attainment >= react.serving_slo_attainment
+        ),
+        "loaning": (
+            res.serving_loaned_gpu_hours > 0.0 and training > training_noloan
+        ),
+    }
+    print(
+        f"serving: {len(SERVING_MIX)} services reserved={out['reserved_gpus']} "
+        f"gpus, slo={res.serving_slo_attainment:.4f} "
+        f"({res.serving_violations}/{res.serving_windows} windows violated), "
+        f"reclaims={res.serving_reclaims} "
+        f"max={res.serving_reclaim_max_seconds:.0f}s "
+        f"(deadline {res.serving_reclaim_deadline_seconds:.0f}s), "
+        f"loaned={res.serving_loaned_gpu_hours:.0f} gpu-h, "
+        f"training +{out['loaning_training_gain_gpu_hours']:.0f} gpu-h vs "
+        f"no-loaning, reactive slo={react.serving_slo_attainment:.4f}"
+    )
+    if check_equivalence:
+        sig = _serving_signature(res) | _result_signature(res)
+        main_digest = None
+        out["equivalence"] = "ok"
+        for vec, jt in [(True, True), (True, False), (False, True), (False, False)]:
+            other_res, _, other = _run(
+                "predictive", loaning=True, vec=vec, jt=jt, digest=True
+            )
+            if main_digest is None:
+                main_digest = other.digest()
+                out["decision_digest"] = main_digest
+            osig = _serving_signature(other_res) | _result_signature(other_res)
+            if other.digest() != main_digest or osig != sig:
+                out["equivalence"] = "FAILED"
+                print(
+                    f"SERVING EQUIVALENCE FAILURE: "
+                    f"{'vectorized' if vec else 'scalar'}+"
+                    f"{'table' if jt else 'plain'} diverged:\n"
+                    f"  main:  digest={main_digest} {sig}\n"
+                    f"  other: digest={other.digest()} {osig}",
+                    file=sys.stderr,
+                )
+        if out["equivalence"] == "ok":
+            print(
+                "serving equivalence: all four policy/representation "
+                f"combinations match (digest {main_digest[:12]}...)"
+            )
+    failed = [k for k, ok in gates.items() if not ok]
+    out["gates"] = {k: ("ok" if ok else "FAILED") for k, ok in gates.items()}
+    if failed or out["equivalence"] == "FAILED":
+        trace = sim.serving.trace
+        artifact = {
+            "failed_gates": failed,
+            "summary": {k: v for k, v in out.items() if k != "services"},
+            "sample_seconds": trace.sample_seconds,
+            "qps": {
+                name: [round(float(q), 3) for q in trace.qps[i]]
+                for i, name in enumerate(sim.serving.table.names)
+            },
+        }
+        with open(SERVING_TRACE_JSON, "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+        print(
+            f"SERVING GATE FAILURE: {failed or ['equivalence']} — trace "
+            f"dumped to {SERVING_TRACE_JSON}",
+            file=sys.stderr,
+        )
+    return out
+
 # the reliability row multiplies per-job work by this much: periodic
 # checkpointing only pays off for jobs long enough to meet a failure,
 # and node-accurate blast radii make the base trace's short jobs
@@ -362,6 +575,7 @@ def bench(
     sla_ledger: bool = True,
     failure_spec: Optional[str] = None,
     job_table: bool = True,
+    serving: bool = False,
 ) -> Dict:
     # the committed BENCH_sched.json (if the target already exists) is
     # the decide-time budget the new run is gated against
@@ -474,6 +688,15 @@ def bench(
                 f"{DECIDE_BUDGET_FACTOR:.1f}x of the committed "
                 f"{budget:.2f}s baseline"
             )
+
+    if serving:
+        out["serving"] = bench_serving(
+            n_jobs,
+            regions,
+            clusters_per_region,
+            gpus_per_cluster,
+            check_equivalence,
+        )
 
     if failure_spec:
         out["reliability"] = bench_failures(
@@ -686,6 +909,14 @@ def main(argv: Optional[List[str]] = None) -> int:
         "decision digests",
     )
     parser.add_argument(
+        "--serving",
+        action="store_true",
+        help="add the elastic serving row: mix a 24h diurnal+spike "
+        "inference trace into the training trace and gate p99 SLO "
+        "attainment, reclaim latency against the CostModel deadline, "
+        "and the loaning training-throughput gain (docs/serving.md)",
+    )
+    parser.add_argument(
         "--harness",
         action="store_true",
         help="print the benchmark-harness CSV rows instead",
@@ -706,9 +937,18 @@ def main(argv: Optional[List[str]] = None) -> int:
         sla_ledger=not args.no_sla_ledger,
         failure_spec=args.failure_trace,
         job_table=not args.no_job_table,
+        serving=args.serving,
     )
     if out["equivalence"] == "FAILED" or out["decide_gate"] == "FAILED":
         return 1
+    srv = out.get("serving")
+    if srv is not None:
+        if srv["equivalence"] == "FAILED":
+            return 1
+        bad = [k for k, v in srv["gates"].items() if v != "ok"]
+        if bad:
+            print(f"SERVING GATES FAILED: {bad}", file=sys.stderr)
+            return 1
     rel = out.get("reliability")
     if rel is not None:
         if rel["equivalence"] == "FAILED":

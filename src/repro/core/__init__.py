@@ -13,21 +13,19 @@
                       scalar per-job accounts + the vectorized
                       fleet-wide struct-of-arrays ledger
 """
+import importlib
+
 from repro.core.barrier import (  # noqa: F401
     BarrierResult,
     BarrierWorker,
     CollectiveEngine,
     run_barrier_simulation,
 )
-from repro.core.barrier_jax import BarrierDriver, meta_allreduce  # noqa: F401
 from repro.core.buffers import Buffer, DeviceMemory, OutOfMemory  # noqa: F401
-from repro.core.checkpoint import CheckpointStore, SnapshotStats  # noqa: F401
 from repro.core.device_proxy import (  # noqa: F401
     DeviceProxyClient,
     DeviceProxyServer,
 )
-from repro.core.elastic import ElasticRuntime  # noqa: F401
-from repro.core.migration import MigrationReport, checkpoint_job, migrate  # noqa: F401
 from repro.core.sla import (  # noqa: F401
     TIERS,
     FleetSLAAccounts,
@@ -41,3 +39,30 @@ from repro.core.validation import (  # noqa: F401
     run_validated_training,
     validate_squashing_window,
 )
+
+# barrier_jax / checkpoint / elastic / migration import jax at module
+# scope; resolve their names lazily (PEP 562) so the analytic
+# scheduler/serving path — which only needs ``sla`` — imports without it.
+_LAZY = {
+    "BarrierDriver": "barrier_jax",
+    "meta_allreduce": "barrier_jax",
+    "CheckpointStore": "checkpoint",
+    "SnapshotStats": "checkpoint",
+    "ElasticRuntime": "elastic",
+    "MigrationReport": "migration",
+    "checkpoint_job": "migration",
+    "migrate": "migration",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        mod = importlib.import_module(f"repro.core.{_LAZY[name]}")
+        val = getattr(mod, name)
+        globals()[name] = val
+        return val
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))

@@ -4,7 +4,6 @@ from repro.scheduler.costs import (
     RegionTopology,
     UniformCostModel,
 )
-from repro.scheduler.executor import FleetExecutor, ManagedJob
 from repro.scheduler.job_table import JobTable, JobView, TableJob
 from repro.scheduler.policy import ElasticPolicy, StaticGangPolicy
 from repro.scheduler.reliability import (
@@ -13,8 +12,34 @@ from repro.scheduler.reliability import (
     FailureModel,
     FailureTrace,
 )
+from repro.scheduler.serving import (
+    ServiceSpec,
+    ServingConfig,
+    ServingTier,
+    TrafficConfig,
+    TrafficTrace,
+)
 from repro.scheduler.simulator import FleetSimulator, SimConfig
 from repro.scheduler.types import Cluster, Fleet, Job, Region
+
+# The executor drives real jax processes; load it lazily (PEP 562) so the
+# pure-numpy scheduler/simulator/serving path imports without jax.
+_LAZY = ("FleetExecutor", "ManagedJob")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.scheduler import executor
+
+        val = getattr(executor, name)
+        globals()[name] = val
+        return val
+    raise AttributeError(f"module 'repro.scheduler' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))
+
 
 __all__ = [
     "CostModel",
@@ -32,6 +57,11 @@ __all__ = [
     "FailureEvent",
     "FailureModel",
     "FailureTrace",
+    "ServiceSpec",
+    "ServingConfig",
+    "ServingTier",
+    "TrafficConfig",
+    "TrafficTrace",
     "FleetSimulator",
     "SimConfig",
     "Cluster",

@@ -72,6 +72,7 @@ _COLUMNS = (
     ("tier_code", np.int64, 0),
     ("queued_since", np.float64, 0.0),
     ("ever_ran", np.bool_, False),
+    ("service", np.bool_, False),
     ("progress", np.float64, 0.0),
     ("snap_progress", np.float64, 0.0),
     ("snap_time", np.float64, 0.0),
@@ -98,6 +99,7 @@ _SCALAR_FIELDS = (
     "restore_debt",
     "queued_since",
     "ever_ran",
+    "service",
     "progress",
     "snap_progress",
     "snap_time",
@@ -471,6 +473,7 @@ class TableJob(Job):
     gpu_hours = _float_col("gpu_hours")
     splice_overhead = _float_col("splice_overhead")
     ever_ran = _bool_col("ever_ran")
+    service = _bool_col("service")
 
     @property
     def done_at(self) -> Optional[float]:

@@ -438,6 +438,7 @@ class ElasticPolicy:
             cb = table.checkpoint_bytes[slots].astype(np.float64)
             debt = table.restore_debt[slots]
             ran = table.ever_ran[slots]
+            svc = table.service[slots]
         else:
             base = np.array(
                 [
@@ -450,11 +451,12 @@ class ElasticPolicy:
                         j.restore_debt,
                         _TIER_CODE[j.tier],
                         j.queued_since,
+                        j.service,
                     )
                     for j in active
                 ],
                 dtype=np.float64,
-            ).reshape(n, 8)
+            ).reshape(n, 9)
             demand = base[:, 0].astype(np.int64)
             min_g = base[:, 1].astype(np.int64)
             alloc0 = base[:, 2].astype(np.int64)
@@ -463,6 +465,7 @@ class ElasticPolicy:
             qsince = base[:, 7]
             cb = base[:, 4]
             debt = base[:, 5]
+            svc = base[:, 8] > 0.5
             ran = None  # gathered lazily, only when a cost model needs it
         self.gather_seconds += time.perf_counter() - t_gather
         prio = _TIER_PRIO[tcode]
@@ -537,11 +540,15 @@ class ElasticPolicy:
             np.where(aged, rate * (wait - threshold), 0.0),
         )
         waiting = (~(running | aged)).astype(np.int64)
-        # admission order: tier first; within a tier the running jobs and
-        # aged long-queued jobs come ahead of the plain queue, ranked by
-        # how expensive they are to stop (or how starved they are), then
-        # FIFO (lexsort: last key is primary)
-        order_a = np.lexsort((idx, arrival, -score, waiting, -prio))
+        # admission order: tier first, serving replica groups ahead of
+        # training within their tier (a reclaim retarget must never wait
+        # on training admission); then the running jobs and aged
+        # long-queued jobs come ahead of the plain queue, ranked by how
+        # expensive they are to stop (or how starved they are), then FIFO
+        # (lexsort: last key is primary)
+        order_a = np.lexsort(
+            (idx, arrival, -score, waiting, -svc.astype(np.int64), -prio)
+        )
         # failed-out domains await repair: only healthy capacity is real
         total = fleet.capacity()
         galloc = np.zeros(n, dtype=np.int64)
@@ -576,14 +583,16 @@ class ElasticPolicy:
         # 3. opportunistic expansion into spare capacity — only with real
         #    fleet slack, only for jobs admitted this interval, and only
         #    when the resize it would trigger costs less dead GPU time
-        #    than the extra capacity delivers in one interval
+        #    than the extra capacity delivers in one interval.  Serving
+        #    replica groups never expand past their autoscaler target:
+        #    replicas beyond it buy no SLO, only churn
         if rem > 0.1 * total:
             extra = (demand * (self.expand_factor - 1.0)).astype(np.int64)
             gain = extra.astype(np.float64) * interval
             burn = resize_s * (galloc + extra).astype(np.float64)
             free_event = ~running | (galloc != alloc0)
             gate = (cm is None) | free_event | (burn < gain)
-            cand3 = (galloc > 0) & (extra > 0) & gate
+            cand3 = (galloc > 0) & (extra > 0) & gate & ~svc
             order_s = np.lexsort((idx, sup))
             g3, rem = _greedy_take(
                 np.where(cand3, extra, 0)[order_s],
@@ -1037,6 +1046,7 @@ class ElasticPolicy:
             range(n),
             key=lambda i: (
                 -TIERS[active[i].tier].preempt_priority,
+                0 if active[i].service else 1,
                 0 if (running[i] or aged[i]) else 1,
                 -score[i],
                 active[i].arrival,
@@ -1084,6 +1094,8 @@ class ElasticPolicy:
             for i in order_s:
                 if galloc[i] == 0:
                     continue
+                if active[i].service:
+                    continue  # serving never expands past its target
                 extra = int(active[i].demand_gpus * (self.expand_factor - 1))
                 if extra <= 0:
                     continue

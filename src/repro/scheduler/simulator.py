@@ -61,6 +61,7 @@ from repro.scheduler.job_table import JobTable, JobView, TableJob
 from repro.scheduler.node_map import NodeMap, floor_gang
 from repro.scheduler.policy import Decision
 from repro.scheduler.reliability import CheckpointCadence, FailureModel, FailureTrace
+from repro.scheduler.serving import ServingConfig, ServingTier
 from repro.scheduler.types import Cluster, Fleet, Job, Region
 
 # tier gpu_fraction lookup by JobTable tier code (same enumeration order)
@@ -100,6 +101,11 @@ class SimConfig:
     # a defragmentation pass consolidates stranded fragments.  False keeps
     # the pre-NodeMap cluster-granular behaviour.
     node_placement: bool = True
+    # elastic inference serving tier (scheduler/serving.py): services become
+    # guaranteed jobs whose demand an autoscaler retargets every tick from a
+    # seeded traffic trace, loaning idle reserved capacity to best-effort
+    # training between spikes.  None = no serving tier.
+    serving: Optional[ServingConfig] = None
 
     def costs(self) -> CostModel:
         if self.cost_model is not None:
@@ -152,6 +158,25 @@ class SimResult:
     # admissible single-node piece, and the consolidation moves made
     fragmentation_stranded_gpus: float = 0.0
     defrag_migrations: int = 0  # subset of ``migrations``
+    # serving-tier accounting (all zero / empty without SimConfig.serving):
+    # SLO windows are (service, tick) pairs; a window is met when enough
+    # WARM replicas covered the window's peak qps.  Reclaim latency is the
+    # time from a loan-reclaiming retarget to warm restored capacity,
+    # measured against the CostModel-charged deadline.
+    serving_windows: int = 0
+    serving_violations: int = 0
+    serving_slo_attainment: float = 1.0
+    serving_attainment_by_service: Dict[str, float] = dataclasses.field(
+        default_factory=dict
+    )
+    serving_reclaims: int = 0
+    serving_reclaim_mean_seconds: float = 0.0
+    serving_reclaim_max_seconds: float = 0.0
+    serving_reclaim_deadline_seconds: float = 0.0
+    serving_reclaims_over_deadline: int = 0
+    serving_loaned_gpu_hours: float = 0.0
+    serving_gpu_hours: float = 0.0
+    serving_reserved_gpus: int = 0
 
     def summary(self) -> str:
         sla = ", ".join(f"{t}={v:.3f}" for t, v in self.sla_attainment.items())
@@ -172,6 +197,14 @@ class SimResult:
                 f"snapshots={self.snapshots} "
                 f"lost={self.lost_work_gpu_seconds / 3600:.1f} gpu-h "
                 f"goodput={self.goodput_fraction:.3f}"
+            )
+        if self.serving_windows:
+            out += (
+                f" slo={self.serving_slo_attainment:.4f} "
+                f"reclaims={self.serving_reclaims} "
+                f"(max={self.serving_reclaim_max_seconds:.0f}s/"
+                f"{self.serving_reclaim_deadline_seconds:.0f}s) "
+                f"loaned={self.serving_loaned_gpu_hours:.0f} gpu-h"
             )
         return out
 
@@ -258,8 +291,6 @@ class FleetSimulator:
         cfg: Optional[SimConfig] = None,
     ):
         self.fleet = fleet
-        self._jobs_list = list(jobs)
-        self.jobs = {j.id: j for j in jobs}
         self.policy = policy
         self.cfg = cfg or SimConfig()
         self.costs = self.cfg.costs()
@@ -267,6 +298,27 @@ class FleetSimulator:
         # migrations charged by (source, destination) region pair
         if fleet.topology is not None and self.costs.topology is None:
             self.costs = dataclasses.replace(self.costs, topology=fleet.topology)
+        # elastic serving tier: each service becomes a guaranteed Job
+        # PREPENDED to the trace (the slot == index invariants below then
+        # hold for them too) whose demand column the autoscaler retargets
+        # in _serving_begin before every decide
+        self.serving: Optional[ServingTier] = None
+        self._svc_open = False
+        jobs = list(jobs)
+        if self.cfg.serving is not None:
+            self.serving = ServingTier(
+                self.cfg.serving,
+                self.cfg.tick_seconds,
+                self.cfg.horizon_seconds,
+                self.costs,
+            )
+            jobs = self.serving.jobs + jobs
+            self._svc_idx = np.arange(len(self.serving.jobs))
+            self._basic_mask = np.fromiter(
+                (j.tier == "basic" for j in jobs), bool, len(jobs)
+            )
+        self._jobs_list = jobs
+        self.jobs = {j.id: j for j in jobs}
         # thread the charged cost model into the policy (unless the caller
         # configured one explicitly): the scheduler should weigh the same
         # downtime the simulator charges
@@ -975,6 +1027,63 @@ class FleetSimulator:
                 self.queue_seconds += dt
         self.now = end
 
+    # ==================== serving tier hooks ==================================
+
+    def _serving_begin(self, now: float) -> None:
+        """Once per scheduler tick, before decide: retarget each service's
+        demand column from the traffic trace + autoscaler.  Both policy
+        paths then see identical inputs, so decision digests stay
+        equivalent with services in the mix."""
+        targets = self.serving.begin_tick(now)
+        self._svc_open = targets is not None
+        if targets is None:
+            return
+        idx = self._svc_idx
+        if self._table is not None:
+            self._table.demand_gpus[idx] = targets
+        else:
+            for k in range(idx.size):
+                self._jobs_list[k].demand_gpus = int(targets[k])
+            demand = getattr(self, "_demand", None)
+            if demand is not None:
+                demand[idx] = targets.astype(demand.dtype)
+
+    def _serving_end(self, now: float) -> None:
+        """After the tick's decision is applied: score the SLO window,
+        close reclaim deficits, accrue loaned GPU time."""
+        self._svc_open = False
+        idx = self._svc_idx
+        n = len(self._jobs_list)
+        if self._table is not None:
+            col = self._table.allocated
+            dtu = self._table.downtime_until[idx].astype(np.float64)
+        else:
+            col = getattr(self, "_alloc", None)
+            if col is not None:
+                dtu = self._downtime_until[idx].astype(np.float64)
+        if col is not None:
+            alloc = col[idx].astype(np.int64)
+            basic = float(col[:n][self._basic_mask].sum())
+        else:  # legacy loop over plain Job objects
+            alloc = np.fromiter(
+                (self._jobs_list[k].allocated for k in range(idx.size)),
+                np.int64,
+                idx.size,
+            )
+            dtu = np.fromiter(
+                (self._jobs_list[k].downtime_until for k in range(idx.size)),
+                np.float64,
+                idx.size,
+            )
+            basic = float(
+                sum(
+                    j.allocated
+                    for j, b in zip(self._jobs_list, self._basic_mask)
+                    if b
+                )
+            )
+        self.serving.end_tick(now, alloc, dtu, basic)
+
     def _run_legacy_loop(self) -> None:
         cfg = self.cfg
         events = [j.arrival for j in self.jobs.values()]
@@ -995,9 +1104,13 @@ class FleetSimulator:
             arrived = [j for j in self.jobs.values() if j.arrival <= self.now]
             if self._reliability:
                 self._tick_reliability([j for j in arrived if j.done_at is None])
+            if self.serving is not None:
+                self._serving_begin(self.now)
             decision = self.policy.decide(self.now, arrived, self.fleet)
             self._apply(decision)
             self._frag_defrag_tick(arrived)
+            if self.serving is not None and self._svc_open:
+                self._serving_end(self.now)
 
     # ==================== vectorized event loop ===============================
 
@@ -1173,6 +1286,8 @@ class FleetSimulator:
                             self._alloc[i] = j.allocated
                             self._progress[i] = j.progress
                             self._downtime_until[i] = j.downtime_until
+                if self.serving is not None:
+                    self._serving_begin(t)
                 decision = self.policy.decide(t, active_jobs, self.fleet)
                 self._apply(decision)
                 self._frag_defrag_tick(active_jobs)
@@ -1180,6 +1295,8 @@ class FleetSimulator:
                     for i in act:
                         self._alloc[i] = jobs[i].allocated
                         self._downtime_until[i] = jobs[i].downtime_until
+                if self.serving is not None and self._svc_open:
+                    self._serving_end(t)
             t += cfg.tick_seconds
         # final sync for jobs still in flight at the horizon (table-backed
         # jobs read the live columns; nothing to sync)
@@ -1223,8 +1340,8 @@ class FleetSimulator:
         )
         goodput_vals: Dict[str, List[float]] = {t: [] for t in TIERS}
         for j in jobs:
-            if j.arrival >= self.now:
-                continue
+            if j.arrival >= self.now or j.service:
+                continue  # services never "complete"; SLO metrics cover them
             end = j.done_at if j.done_at is not None else self.now
             if end > j.arrival:
                 goodput_vals[j.tier].append(
@@ -1267,4 +1384,5 @@ class FleetSimulator:
                 self._stranded_sum / self._frag_ticks if self._frag_ticks else 0.0
             ),
             defrag_migrations=self.defrag_migrations,
+            **(self.serving.summary() if self.serving is not None else {}),
         )

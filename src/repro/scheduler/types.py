@@ -132,6 +132,10 @@ class Job:
     min_gpus: int = 1
     splice_overhead: float = 0.03  # Fig-4 measured time-slicing overhead
     checkpoint_bytes: int = 0  # deduped snapshot size (Table 4); 0 = estimate
+    # latency-SLO serving replica group (scheduler/serving.py): demand is
+    # retargeted every tick by the autoscaler and the policy must never
+    # expand it past demand (replicas beyond the target buy no SLO)
+    service: bool = False
 
     # runtime state
     allocated: int = 0

@@ -3,22 +3,216 @@
 Inference jobs are first-class in Singularity (the scheduler elastically
 shrinks training to absorb inference load, §1.1b); this engine is the
 serve-side workload driver.  It is also what ``serve_step`` dry-runs lower.
+
+Two halves live here:
+
+* ``ServingEngine`` — the real jax decode loop (jax imported lazily so the
+  scheduler side can import this module on machines without an accelerator
+  stack).
+* The analytic batching/latency model (``GpuSpec``, ``decode_step_seconds``,
+  ``max_batch_for_slo``, ``ReplicaProfile``) — a pure-numpy decode roofline
+  over the model configs we already carry.  ``scheduler/serving.py`` turns a
+  ``ReplicaProfile`` into a qps -> replicas demand curve; ``launch/serve.py``
+  prints the same plan for a single service.
+
+The roofline is the standard decode-step model: per step a replica streams
+the (sharded) weights plus the batch's KV cache from HBM and performs
+``2 * active_params * batch`` FLOPs, so
+
+    step = max(bytes_moved / (g * hbm_bw), flops / (g * peak * mfu)) + overhead
+
+with ``g`` the tensor-parallel degree.  p99 is a fixed multiplier over the
+mean step (queueing + stragglers).  Constants default to the repo-wide v5e
+targets in ``utils/constants.py``.
 """
+
 from __future__ import annotations
 
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
+import dataclasses
+import math
+from typing import TYPE_CHECKING, Optional
 
 from repro.configs.base import ModelConfig
-from repro.models import decode_step_fn, init_params, prefill_fn
-from repro.models.frontend import synth_extra_inputs
+from repro.utils import constants
+
+if TYPE_CHECKING:  # pragma: no cover - typing only, keeps import jax-free
+    import jax
+
+BYTES_PER_PARAM = 2  # bf16 weights and KV cache
+
+
+@dataclasses.dataclass(frozen=True)
+class GpuSpec:
+    """Per-accelerator envelope the decode roofline runs against."""
+
+    name: str = "tpu-v5e"
+    hbm_bytes: int = constants.HBM_BYTES
+    hbm_bandwidth: float = constants.HBM_BANDWIDTH
+    flops: float = constants.PEAK_BF16_FLOPS
+    # achievable fraction of peak during decode (small-batch GEMMs).
+    mfu: float = 0.4
+    # dispatch + collective latency per decode step, seconds.
+    step_overhead_seconds: float = 3e-4
+
+
+DEFAULT_GPU = GpuSpec()
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Parameters touched per decode step (MoE routes ``top_k`` experts)."""
+    total = cfg.param_count()
+    if cfg.moe is None:
+        return total
+    mult = 3 if cfg.mlp == "swiglu" else 2
+    expert = cfg.num_layers * mult * cfg.d_model * cfg.d_ff * cfg.moe.num_experts
+    expert = min(expert, total)
+    active = total - expert + expert * cfg.moe.top_k / cfg.moe.num_experts
+    return int(active)
+
+
+def kv_bytes_per_token(cfg: ModelConfig) -> int:
+    """KV-cache bytes appended per generated token (all layers, K + V)."""
+    if not cfg.num_heads:  # pure-SSM: constant state, charge nothing per token
+        return 0
+    hd = cfg.resolved_head_dim()
+    return 2 * cfg.num_layers * cfg.num_kv_heads * hd * BYTES_PER_PARAM
+
+
+def weight_bytes(cfg: ModelConfig) -> int:
+    return cfg.param_count() * BYTES_PER_PARAM
+
+
+def min_gpus_for_memory(
+    cfg: ModelConfig,
+    gpu: GpuSpec = DEFAULT_GPU,
+    memory_overhead: float = 1.25,
+) -> int:
+    """Smallest power-of-two shard degree whose HBM fits the weights.
+
+    ``memory_overhead`` reserves headroom for KV cache and activations.
+    """
+    need = weight_bytes(cfg) * memory_overhead
+    g = 1
+    while g * gpu.hbm_bytes < need:
+        g *= 2
+    return g
+
+
+def decode_step_seconds(
+    cfg: ModelConfig,
+    batch: int,
+    n_gpus: int,
+    gpu: GpuSpec = DEFAULT_GPU,
+    context_len: int = 1024,
+) -> float:
+    """Mean decode-step latency for one replica sharded over ``n_gpus``."""
+    moved = weight_bytes(cfg) + batch * context_len * kv_bytes_per_token(cfg)
+    mem = moved / n_gpus / gpu.hbm_bandwidth
+    comp = 2.0 * active_param_count(cfg) * batch / n_gpus / (gpu.flops * gpu.mfu)
+    return max(mem, comp) + gpu.step_overhead_seconds
+
+
+def max_batch_for_slo(
+    cfg: ModelConfig,
+    slo_seconds: float,
+    n_gpus: int,
+    gpu: GpuSpec = DEFAULT_GPU,
+    p99_factor: float = 1.4,
+    context_len: int = 1024,
+    max_batch: int = 256,
+) -> int:
+    """Largest batch whose p99 decode step stays within the SLO (0 = none).
+
+    Step latency is monotone nondecreasing in batch, so binary search.
+    """
+    if decode_step_seconds(cfg, 1, n_gpus, gpu, context_len) * p99_factor > (
+        slo_seconds
+    ):
+        return 0
+    lo, hi = 1, max_batch
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        p99 = decode_step_seconds(cfg, mid, n_gpus, gpu, context_len) * p99_factor
+        if p99 <= slo_seconds:
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaProfile:
+    """One replica group's operating point: the qps -> replicas curve.
+
+    Derived once per (model, SLO) pair; the scheduler only ever sees these
+    five numbers plus ``weight_bytes`` (the restore payload a replica must
+    stream before it is warm).
+    """
+
+    name: str
+    gpus_per_replica: int
+    batch: int
+    p99_decode_seconds: float
+    tokens_per_second: float
+    qps_per_replica: float
+    weight_bytes: int
+
+    @classmethod
+    def from_config(
+        cls,
+        cfg: ModelConfig,
+        slo_ms: float,
+        tokens_per_request: int = 128,
+        gpu: GpuSpec = DEFAULT_GPU,
+        p99_factor: float = 1.4,
+        context_len: int = 1024,
+        max_gpus: int = 256,
+    ) -> "ReplicaProfile":
+        """Pick the smallest power-of-two shard degree meeting the SLO."""
+        slo = slo_ms / 1e3
+        g = min_gpus_for_memory(cfg, gpu)
+        batch = 0
+        while g <= max_gpus:
+            batch = max_batch_for_slo(cfg, slo, g, gpu, p99_factor, context_len)
+            if batch > 0:
+                break
+            g *= 2
+        if batch == 0:
+            raise ValueError(
+                f"{cfg.name}: p99 {slo_ms}ms unreachable within "
+                f"{max_gpus} gpus/replica"
+            )
+        step = decode_step_seconds(cfg, batch, g, gpu, context_len)
+        tps = batch / step
+        return cls(
+            name=cfg.name,
+            gpus_per_replica=g,
+            batch=batch,
+            p99_decode_seconds=step * p99_factor,
+            tokens_per_second=tps,
+            qps_per_replica=tps / tokens_per_request,
+            weight_bytes=weight_bytes(cfg),
+        )
+
+    def replicas_for(self, qps: float, utilization: float = 1.0) -> int:
+        """Replicas needed to serve ``qps`` at the given target utilization."""
+        if qps <= 0.0:
+            return 0
+        return int(math.ceil(qps / (self.qps_per_replica * utilization)))
 
 
 class ServingEngine:
-    def __init__(self, cfg: ModelConfig, seed: int = 0,
-                 params: Optional[dict] = None):
+    def __init__(
+        self, cfg: ModelConfig, seed: int = 0, params: Optional[dict] = None
+    ):
+        import jax
+
+        from repro.models import decode_step_fn, init_params, prefill_fn
+        from repro.models.frontend import synth_extra_inputs
+
+        self._jax = jax
+        self._prefill_fn = prefill_fn
+        self._synth_extra_inputs = synth_extra_inputs
         self.cfg = cfg
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else init_params(cfg, key)
@@ -29,32 +223,42 @@ class ServingEngine:
     def _prefill(self, params, batch, cache_len: int):
         if cache_len not in self._prefills:
             cfg = self.cfg
-            self._prefills[cache_len] = jax.jit(
-                lambda p, b: prefill_fn(p, b, cfg, cache_len=cache_len))
+            prefill_fn = self._prefill_fn
+            self._prefills[cache_len] = self._jax.jit(
+                lambda p, b: prefill_fn(p, b, cfg, cache_len=cache_len)
+            )
         return self._prefills[cache_len](params, batch)
 
-    def generate(self, prompts: jax.Array, max_new_tokens: int,
-                 temperature: float = 0.0, seed: int = 0) -> jax.Array:
+    def generate(
+        self,
+        prompts: "jax.Array",
+        max_new_tokens: int,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ) -> "jax.Array":
         """prompts: (B, S) int32 -> generated (B, max_new_tokens) int32."""
+        jax = self._jax
         b = prompts.shape[0]
         batch = {"tokens": prompts}
-        batch.update(synth_extra_inputs(self.cfg, b, self._extra_key))
-        logits, state = self._prefill(self.params, batch,
-                                      prompts.shape[1] + max_new_tokens)
+        batch.update(self._synth_extra_inputs(self.cfg, b, self._extra_key))
+        logits, state = self._prefill(
+            self.params, batch, prompts.shape[1] + max_new_tokens
+        )
         key = jax.random.PRNGKey(seed)
         out = []
         tok = self._sample(logits, temperature, key)
         out.append(tok)
-        for i in range(max_new_tokens - 1):
+        for _ in range(max_new_tokens - 1):
             key, sub = jax.random.split(key)
             logits, state = self._decode(self.params, state, tok)
             tok = self._sample(logits, temperature, sub)
             out.append(tok)
-        return jnp.stack(out, axis=1)
+        return jax.numpy.stack(out, axis=1)
 
-    @staticmethod
-    def _sample(logits: jax.Array, temperature: float, key) -> jax.Array:
+    def _sample(self, logits: "jax.Array", temperature: float, key) -> "jax.Array":
+        jnp = self._jax.numpy
         if temperature <= 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(
-            key, logits / temperature, axis=-1).astype(jnp.int32)
+        return self._jax.random.categorical(
+            key, logits / temperature, axis=-1
+        ).astype(jnp.int32)

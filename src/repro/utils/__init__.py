@@ -1,1 +1,24 @@
-from repro.utils import constants, hashing, pytree  # noqa: F401
+"""Utility package.
+
+``constants`` is eager (pure numbers, used by the jax-free scheduler path);
+``hashing`` and ``pytree`` load lazily on first attribute access so that
+importing the scheduler or the analytic serving model does not drag in jax.
+"""
+
+import importlib
+
+from repro.utils import constants  # noqa: F401
+
+_LAZY = ("hashing", "pytree")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        mod = importlib.import_module(f"repro.utils.{name}")
+        globals()[name] = mod
+        return mod
+    raise AttributeError(f"module 'repro.utils' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))
