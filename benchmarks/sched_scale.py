@@ -39,18 +39,23 @@ planet-scale acceptance run, with and without the ledger):
 
 ``--check-equivalence`` re-runs the whole trace under every other
 {JobTable, plain jobs} x {vectorized, scalar reference} combination
-(fairness aging enabled throughout, as in production) and exits non-zero
-unless the aggregates and the hash of the full decision sequence match
+(fairness aging enabled throughout, as in production), plus one run
+with the batched placement core disabled (``node_batch=False`` — the
+per-job loop oracle), and exits non-zero unless the aggregates and the
+hash of the full decision sequence — node span plans included — match
 the main run exactly — the CI gate that keeps the numpy passes honest.
 When the ``--json`` target already exists (the committed
 ``BENCH_sched.json``), its ``decide_seconds`` is the budget: the run
 also fails if the new decide time exceeds it by more than
 ``DECIDE_BUDGET_FACTOR`` (2x — host noise passes, a reintroduced
-per-job gather does not).  Node-granular placement is on throughout
-(every policy decision carries a span plan), so the decision digest,
-the decide-time budget and the reported
-``fragmentation_stranded_gpus`` / ``defrag_migrations`` fields all
-gate the node path.
+per-job gather does not).  The node-placement share of the decide path
+is timed separately (``node_seconds``) and gated against its own
+committed budget at the same factor, so a placement-core regression
+cannot hide inside decide-time headroom left by the other passes.
+Node-granular placement is on throughout (every policy decision
+carries a span plan), so the decision digest, the decide-time budget
+and the reported ``fragmentation_stranded_gpus`` /
+``defrag_migrations`` fields all gate the node path.
 
 ``--failure-trace storm`` adds a reliability row: a long-job variant of
 the trace (``RELIABILITY_WORK_FACTOR`` x the work per job — node-accurate
@@ -146,6 +151,13 @@ class _TimedPolicy:
         base-array build they replace)."""
         return getattr(self.inner, "gather_seconds", 0.0)
 
+    @property
+    def node_seconds(self) -> float:
+        """Seconds of ``decide_seconds`` spent inside the node-granular
+        placement pass (``_place_nodes``): the batched segment-reduce
+        core, or the per-job loop oracle when ``node_batch=False``."""
+        return getattr(self.inner, "node_seconds", 0.0)
+
     def bind_costs(self, cost_model, interval_hint) -> None:
         self.inner.bind_costs(cost_model, interval_hint)
 
@@ -154,11 +166,22 @@ class _TimedPolicy:
         decision = self.inner.decide(now, jobs, fleet)
         self.decide_seconds += time.perf_counter() - t0
         if self._digest is not None:
+            spans = None
+            if decision.node_plan is not None:
+                _, released, assigns = decision.node_plan
+                spans = (
+                    sorted(int(r) for r in released),
+                    [
+                        (int(r), [int(n) for n in ns], [int(g) for g in gs])
+                        for r, ns, gs in assigns
+                    ],
+                )
             payload = repr(
                 (
                     sorted(decision.alloc.items()),
                     decision.preemptions,
                     decision.migrations,
+                    spans,
                 )
             )
             self._digest.update(payload.encode())
@@ -252,9 +275,9 @@ def bench_failures(
     with node-accurate blast radii a short job rarely meets a failure,
     and periodic checkpointing is a long-job mechanism), with and
     without the Young–Daly checkpoint cadence, gating (a) the
-    vectorized==scalar and JobTable==plain-job decision digests under
-    the storm and (b) the strict goodput win cadence must deliver over
-    checkpoint-on-preempt-only."""
+    vectorized==scalar, JobTable==plain-job and batched==loop-oracle
+    decision digests under the storm and (b) the strict goodput win
+    cadence must deliver over checkpoint-on-preempt-only."""
 
     def _run(policy, cadence, job_table: bool = True, work_factor: float = 1.0):
         fleet = _fleet(regions, clusters_per_region, gpus_per_cluster)
@@ -324,18 +347,24 @@ def bench_failures(
         ref_res, _ = _run(ref, None)
         plain = _TimedPolicy(ElasticPolicy(), digest=True)
         plain_res, _ = _run(plain, None, job_table=False)
+        loop = _TimedPolicy(ElasticPolicy(node_batch=False), digest=True)
+        loop_res, _ = _run(loop, None)
         same = (
             vec.digest() == ref.digest()
             and vec.digest() == plain.digest()
+            and vec.digest() == loop.digest()
             and _result_signature(vec_res) == _result_signature(ref_res)
             and _result_signature(vec_res) == _result_signature(plain_res)
+            and _result_signature(vec_res) == _result_signature(loop_res)
             and vec_res.lost_work_gpu_seconds == ref_res.lost_work_gpu_seconds
             and vec_res.lost_work_gpu_seconds == plain_res.lost_work_gpu_seconds
+            and vec_res.lost_work_gpu_seconds == loop_res.lost_work_gpu_seconds
         )
         out["decision_digest"] = vec.digest()
         out["equivalence"] = "ok" if same else "FAILED"
         print(
-            f"failure-storm equivalence (scalar policy + plain jobs): "
+            f"failure-storm equivalence (scalar policy + plain jobs + "
+            f"placement loop oracle): "
             f"{out['equivalence']} (digest {vec.digest()[:12]}...)"
         )
     return out
@@ -416,14 +445,17 @@ def bench_serving(
       reserved capacity converted to training throughput, not just
       moved);
     * (with ``--check-equivalence``) all four {JobTable, plain jobs} x
-      {vectorized, scalar} combinations replay the same decision digest
-      with services active.
+      {vectorized, scalar} combinations — plus the per-job placement
+      loop oracle (``node_batch=False``) — replay the same decision
+      digest with services active.
 
     On any gate failure the full qps trace and per-service attainment
     are dumped to ``SERVING_trace.json`` for offline debugging.
     """
 
-    def _run(autoscaler: str, loaning: bool, vec=True, jt=True, digest=False):
+    def _run(
+        autoscaler: str, loaning: bool, vec=True, jt=True, nb=True, digest=False
+    ):
         fleet = _fleet(regions, clusters_per_region, gpus_per_cluster)
         inter = SERVING_HORIZON / n_jobs
         work = (
@@ -442,7 +474,9 @@ def bench_serving(
             autoscaler=autoscaler,
             loaning=loaning,
         )
-        policy = _TimedPolicy(ElasticPolicy(vectorized=vec), digest=digest)
+        policy = _TimedPolicy(
+            ElasticPolicy(vectorized=vec, node_batch=nb), digest=digest
+        )
         sim = FleetSimulator(
             fleet,
             jobs,
@@ -513,9 +547,15 @@ def bench_serving(
         sig = _serving_signature(res) | _result_signature(res)
         main_digest = None
         out["equivalence"] = "ok"
-        for vec, jt in [(True, True), (True, False), (False, True), (False, False)]:
+        for vec, jt, nb in [
+            (True, True, True),
+            (True, False, True),
+            (False, True, True),
+            (False, False, True),
+            (True, True, False),
+        ]:
             other_res, _, other = _run(
-                "predictive", loaning=True, vec=vec, jt=jt, digest=True
+                "predictive", loaning=True, vec=vec, jt=jt, nb=nb, digest=True
             )
             if main_digest is None:
                 main_digest = other.digest()
@@ -526,7 +566,8 @@ def bench_serving(
                 print(
                     f"SERVING EQUIVALENCE FAILURE: "
                     f"{'vectorized' if vec else 'scalar'}+"
-                    f"{'table' if jt else 'plain'} diverged:\n"
+                    f"{'table' if jt else 'plain'}"
+                    f"{'' if nb else '+loop-oracle'} diverged:\n"
                     f"  main:  digest={main_digest} {sig}\n"
                     f"  other: digest={other.digest()} {osig}",
                     file=sys.stderr,
@@ -534,7 +575,8 @@ def bench_serving(
         if out["equivalence"] == "ok":
             print(
                 "serving equivalence: all four policy/representation "
-                f"combinations match (digest {main_digest[:12]}...)"
+                "combinations and the placement loop oracle match "
+                f"(digest {main_digest[:12]}...)"
             )
     failed = [k for k, ok in gates.items() if not ok]
     out["gates"] = {k: ("ok" if ok else "FAILED") for k, ok in gates.items()}
@@ -578,16 +620,22 @@ def bench(
     serving: bool = False,
 ) -> Dict:
     # the committed BENCH_sched.json (if the target already exists) is
-    # the decide-time budget the new run is gated against
+    # the decide-time budget the new run is gated against; the node-pass
+    # share carries its own budget so a placement-core regression cannot
+    # hide inside decide-time headroom left by the other passes
     budget = None
+    node_budget = None
     if json_path and os.path.exists(json_path):
         try:
             with open(json_path) as f:
                 committed = json.load(f)
             if committed.get("jobs") == n_jobs:
                 budget = float(committed["decide_seconds"])
+                if "node_seconds" in committed:
+                    node_budget = float(committed["node_seconds"])
         except (ValueError, KeyError, OSError):
             budget = None
+            node_budget = None
     fleet = _fleet(regions, clusters_per_region, gpus_per_cluster)
     horizon = _horizon(n_jobs, fleet.total())
     policy = _TimedPolicy(ElasticPolicy(), digest=check_equivalence)
@@ -607,11 +655,13 @@ def bench(
         "jobs_per_sec": n_jobs / wall,
         "decide_seconds": policy.decide_seconds,
         "gather_seconds": policy.gather_seconds,
+        "node_seconds": policy.node_seconds,
         "sla_ledger": sla_ledger,
         "job_table": job_table,
         "events": sim.events_processed,
         "equivalence": "skipped",
         "decide_gate": "skipped",
+        "node_gate": "skipped",
         **_result_signature(res),
     }
     msg = (
@@ -620,7 +670,8 @@ def bench(
         f"{n_jobs} jobs in {wall:.1f}s "
         f"({out['jobs_per_sec']:.0f} jobs/sec, "
         f"decide-path {policy.decide_seconds:.1f}s, "
-        f"gather {policy.gather_seconds:.2f}s), "
+        f"gather {policy.gather_seconds:.2f}s, "
+        f"node-pass {policy.node_seconds:.1f}s), "
         f"util={res.utilization:.3f} done={res.completed} "
         f"dead={res.gpu_seconds_dead / 3600:.0f} gpu-h "
         f"migr={res.migrations} ({res.migrations_cross_region} cross)"
@@ -629,16 +680,26 @@ def bench(
 
     if check_equivalence:
         # every representation x policy-path combination must reproduce
-        # the main run's decision sequence exactly: {JobTable, plain
-        # jobs} x {vectorized, scalar reference}
-        combos = [(True, True), (True, False), (False, True), (False, False)]
-        combos.remove((True, job_table))
+        # the main run's decision sequence — span plans included —
+        # exactly: {JobTable, plain jobs} x {vectorized, scalar
+        # reference}, plus the per-job placement loop oracle
+        # (node_batch=False) pinning the batched segment-reduce core
+        combos = [
+            (True, True, True),
+            (True, False, True),
+            (False, True, True),
+            (False, False, True),
+            (True, job_table, False),
+        ]
+        combos.remove((True, job_table, True))
         out["decision_digest"] = policy.digest()
         out["equivalence"] = "ok"
         sig = _result_signature(res)
-        for vec, jt in combos:
+        for vec, jt, nb in combos:
             fleet2 = _fleet(regions, clusters_per_region, gpus_per_cluster)
-            other = _TimedPolicy(ElasticPolicy(vectorized=vec), digest=True)
+            other = _TimedPolicy(
+                ElasticPolicy(vectorized=vec, node_batch=nb), digest=True
+            )
             other_res = FleetSimulator(
                 fleet2,
                 _trace(n_jobs, fleet2.total()),
@@ -652,6 +713,7 @@ def bench(
             label = (
                 f"{'vectorized' if vec else 'scalar'}+"
                 f"{'table' if jt else 'plain'}"
+                f"{'' if nb else '+loop-oracle'}"
             )
             osig = _result_signature(other_res)
             if osig != sig or other.digest() != policy.digest():
@@ -665,8 +727,9 @@ def bench(
                 print(err, file=sys.stderr)
         if out["equivalence"] == "ok":
             msg = (
-                f"equivalence: scalar-policy and plain-job runs match "
-                f"decision-for-decision ({res.preemptions} preempts, "
+                f"equivalence: scalar-policy, plain-job and placement "
+                f"loop-oracle runs match decision-for-decision, span "
+                f"plans included ({res.preemptions} preempts, "
                 f"{res.migrations} migrations, {res.resizes} resizes)"
             )
             print(msg)
@@ -687,6 +750,24 @@ def bench(
                 f"decide-time gate: {policy.decide_seconds:.2f}s within "
                 f"{DECIDE_BUDGET_FACTOR:.1f}x of the committed "
                 f"{budget:.2f}s baseline"
+            )
+
+    if node_budget is not None and job_table:
+        out["node_budget_seconds"] = node_budget * DECIDE_BUDGET_FACTOR
+        if policy.node_seconds > node_budget * DECIDE_BUDGET_FACTOR:
+            out["node_gate"] = "FAILED"
+            print(
+                f"NODE-PASS REGRESSION: {policy.node_seconds:.2f}s > "
+                f"{DECIDE_BUDGET_FACTOR:.1f}x the committed "
+                f"{node_budget:.2f}s baseline",
+                file=sys.stderr,
+            )
+        else:
+            out["node_gate"] = "ok"
+            print(
+                f"node-pass gate: {policy.node_seconds:.2f}s within "
+                f"{DECIDE_BUDGET_FACTOR:.1f}x of the committed "
+                f"{node_budget:.2f}s baseline"
             )
 
     if serving:
@@ -939,7 +1020,11 @@ def main(argv: Optional[List[str]] = None) -> int:
         job_table=not args.no_job_table,
         serving=args.serving,
     )
-    if out["equivalence"] == "FAILED" or out["decide_gate"] == "FAILED":
+    if (
+        out["equivalence"] == "FAILED"
+        or out["decide_gate"] == "FAILED"
+        or out["node_gate"] == "FAILED"
+    ):
         return 1
     srv = out.get("serving")
     if srv is not None:

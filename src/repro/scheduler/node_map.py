@@ -48,6 +48,7 @@ capacity is worth the charged migration downtime (``costs.defrag_worthwhile``).
 """
 from __future__ import annotations
 
+import heapq
 from functools import lru_cache
 from typing import TYPE_CHECKING, List, Optional, Sequence, Tuple
 
@@ -118,11 +119,15 @@ def gang_values(demand: int, lo: int, hi: int) -> Tuple[int, ...]:
 def floor_gang(demand: int, min_gpus: int) -> int:
     """Smallest splice-compatible world size at or above ``min_gpus``
     (0 if none) — the smallest gang a queued job could be admitted at,
-    the shape the defragmentation pass tries to unblock."""
+    the shape the defragmentation pass tries to unblock.  A floor above
+    the demand itself is degenerate: admission grants are capped at the
+    demand before placement, so no admissible world size exists and the
+    answer is 0, never a multiple the job could not be granted."""
     d = max(1, int(demand))
     lo = max(1, int(min_gpus))
-    hi = d * -(-lo // d)  # first multiple of demand at or above the floor
-    vals = gang_values(d, lo, max(hi, lo))
+    if lo > d:
+        return 0
+    vals = gang_values(d, lo, d)
     return vals[-1] if vals else 0
 
 
@@ -132,11 +137,16 @@ def min_piece(demand: int, min_gpus: int, gpus_per_node: int) -> int:
     occupy: over every compatible world size ``g >= min_gpus``, the
     smallest of its node pieces (``g`` itself below a node, else the
     remainder ``g % gpus_per_node`` or a full node).  Free capacity in a
-    hole smaller than this can never serve the job — it is stranded."""
+    hole smaller than this can never serve the job — it is stranded.
+    A degenerate floor above the demand admits no gang at all, so no
+    sub-node hole is ever usable: the answer saturates at a full node."""
     gpn = max(1, int(gpus_per_node))
+    d = max(1, int(demand))
     lo = max(1, int(min_gpus))
     best = gpn
-    for g in gang_values(int(demand), lo, 2 * max(int(demand), lo)):
+    if lo > d:
+        return best
+    for g in gang_values(d, lo, 2 * d):
         if g < gpn:
             piece = g
         else:
@@ -448,6 +458,75 @@ class NodeMap:
     def cluster_free_vector(self) -> np.ndarray:
         return np.add.reduceat(self.node_free, self.cluster_lo)
 
+    # ------------------------------------------------------ batched commit
+    def release_many(self, rows: np.ndarray) -> None:
+        """Batched ``release``: one span-pool gather for many rows at
+        once.  Rows without a live span are skipped, like ``release``."""
+        rows = np.asarray(rows, np.int64)
+        if rows.size == 0:
+            return
+        rows = rows[(rows >= 0) & (rows < self.row_len.size)]
+        rows = rows[self.row_len[rows] > 0]
+        if rows.size == 0:
+            return
+        lens = self.row_len[rows]
+        offs = self.row_off[rows]
+        total = int(lens.sum())
+        ends = np.cumsum(lens)
+        sl = np.repeat(offs - (ends - lens), lens) + np.arange(total)
+        nodes = self.span_node[sl]
+        gpus = self.span_gpus[sl]
+        # several rows can hold pieces on one node: aggregate first
+        un, inv = np.unique(nodes, return_inverse=True)
+        add = np.zeros(un.size, np.int64)
+        np.add.at(add, inv, gpus)
+        self.node_free[un] += add
+        self.node_used[un] -= add
+        self.span_gpus[sl] = 0
+        self.span_row[sl] = -1
+        self._garbage += total
+        self.row_len[rows] = 0
+        self.row_total[rows] = 0
+        self.row_k[rows] = -1
+
+    def assign_many(
+        self, assigns: Sequence[Tuple[int, Sequence[int], Sequence[int]]]
+    ) -> None:
+        """Batched ``assign``: install many spans with one pool append,
+        laid out exactly as the equivalent sequence of ``assign`` calls
+        (pieces of each row contiguous, rows in list order)."""
+        if not assigns:
+            return
+        na = len(assigns)
+        rows = np.fromiter((a[0] for a in assigns), np.int64, na)
+        counts = np.fromiter((len(a[1]) for a in assigns), np.int64, na)
+        total = int(counts.sum())
+        nodes = np.fromiter((x for a in assigns for x in a[1]), np.int64, total)
+        gpus = np.fromiter((x for a in assigns for x in a[2]), np.int64, total)
+        self._ensure_row(int(rows.max()))
+        assert np.unique(rows).size == na, "duplicate rows in one plan"
+        assert (self.row_len[rows] == 0).all(), "assign_many over live rows"
+        assert (counts > 0).all() and (gpus > 0).all()
+        self._pool_reserve(total)
+        off = self._pool_n
+        self.span_node[off : off + total] = nodes
+        self.span_gpus[off : off + total] = gpus
+        self.span_row[off : off + total] = np.repeat(rows, counts)
+        self._pool_n = off + total
+        starts = np.cumsum(counts) - counts
+        self.row_off[rows] = off + starts
+        self.row_len[rows] = counts
+        self.row_total[rows] = np.add.reduceat(gpus, starts)
+        self.row_k[rows] = self.node_cluster[nodes[starts]]
+        un, inv = np.unique(nodes, return_inverse=True)
+        take = np.zeros(un.size, np.int64)
+        np.add.at(take, inv, gpus)
+        self.node_free[un] -= take
+        self.node_used[un] += take
+        assert (self.node_free[un] >= 0).all(), (
+            "node over-subscribed in assign_many"
+        )
+
     # ------------------------------------------------------- fragmentation
     def stranded_gpus(self, queued_shapes: Sequence[Tuple[int, int]]) -> int:
         """Free GPUs sitting in holes no queued gang can use: for each
@@ -487,17 +566,53 @@ class PlacementOverlay:
     """A decide-pass view of node free counts: the policy releases and
     fits spans against the overlay without touching the NodeMap, and the
     accumulated plan (``released`` rows + ``assigns`` pieces) is committed
-    by the simulator's ``_apply``.  Per-cluster gang-feasibility stats
-    (empty-node count, largest partial hole) are numpy segment reductions,
-    cached and recomputed only for clusters the pass dirtied."""
+    by the simulator's ``_apply``.
+
+    Per-cluster gang-feasibility stats (empty-node count, largest partial
+    hole) are maintained *incrementally*: ``_hist[k][f]`` counts cluster
+    ``k``'s nodes holding exactly ``f`` free GPUs, built with one bincount
+    at overlay creation and bumped as every fit/release lands.  That makes
+    ``feasible``/``_stats`` O(1) reads instead of per-query segment
+    rescans — the property the batched decide core leans on to test a
+    placement per changed job per tick.
+
+    Two more structures keep the per-fit cost scalar instead of
+    array-sized:
+
+    * **Free-size buckets** — ``_buck[(k, f)]`` lazily materializes the
+      index-ordered list of cluster-``k`` nodes holding exactly ``f``
+      free GPUs (a sorted snapshot plus a heap of nodes pushed as their
+      free count changes).  Entries are validated against ``free`` at
+      pop time, so stale ones cost one discard instead of eager
+      maintenance, and ``fit`` becomes a handful of list/heap ops.
+    * **Lazy cluster max-heap** — ``pick_cluster`` answers the batched
+      core's per-job ``argmax(cfree)``-over-feasible-clusters query
+      from ``_cheap``, a heap of ``(-cfree, cluster)`` entries pushed
+      on every capacity change and validated against the live mirror at
+      pop time (stale entries cost one discard).  Heap order is exactly
+      argmax order — cfree descending, index ascending on ties — so the
+      first feasible head is the oracle's answer, usually after one or
+      two probes; infeasible heads are stashed and pushed back.
+
+    The python list ``_cfree`` is the authoritative per-cluster free
+    count (the hot paths only touch lists); ``cfree`` is a property that
+    lazily re-syncs a numpy view of it on read, so the loop oracle,
+    phase A/C of the batched core, the defragmentation pass, and the
+    tests still consume it vectorized."""
 
     __slots__ = (
         "nm",
         "free",
-        "cfree",
+        "_cfree_np",
+        "_dirty",
+        "_cfree",
+        "_cheap",
+        "_gpn",
+        "_bkey",
+        "_hist",
         "_empty",
         "_maxp",
-        "_dirty",
+        "_buck",
         "released",
         "assigns",
     )
@@ -505,57 +620,225 @@ class PlacementOverlay:
     def __init__(self, nm: NodeMap):
         self.nm = nm
         self.free = nm.node_free.copy()
-        self.cfree = nm.cluster_free_vector().astype(np.int64)
+        self._cfree_np = nm.cluster_free_vector().astype(np.int64)
+        self._dirty = False
         k = nm.n_clusters
-        self._empty = np.zeros(k, np.int64)
-        self._maxp = np.zeros(k, np.int64)
-        self._dirty = np.ones(k, bool)
+        gmax = int(nm.cluster_gpn.max()) if k else 0
+        self._bkey = gmax + 1
+        hist = np.bincount(
+            nm.node_cluster * (gmax + 1) + self.free,
+            minlength=k * (gmax + 1),
+        ).reshape(k, gmax + 1)
+        self._hist = [row.tolist() for row in hist]
+        self._gpn = nm.cluster_gpn.tolist()
+        self._empty = [self._hist[i][self._gpn[i]] for i in range(k)]
+        self._maxp = [0] * k
+        for kk in range(k):
+            self._retally(kk)
+        self._cfree = self._cfree_np.tolist()
+        self._cheap = [(-v, c) for c, v in enumerate(self._cfree)]
+        heapq.heapify(self._cheap)
+        self._buck: dict = {}
         self.released: List[int] = []
         self.assigns: List[Optional[Tuple[int, List[int], List[int]]]] = []
 
+    # ------------------------------------------------ incremental stats
+    def _retally(self, k: int) -> None:
+        """Largest partial hole from the histogram row — one
+        O(gpus_per_node) scan, needed only when the bin holding the
+        previous maximum empties."""
+        h = self._hist[k]
+        m = 0
+        for f in range(1, self._gpn[k]):
+            if h[f]:
+                m = f
+        self._maxp[k] = m
+
+    def _move(self, k: int, j: int, old: int, new: int, popped: bool = False) -> None:
+        """Node ``j`` moves ``old → new`` free GPUs: histogram bins, the
+        empty/max-partial stats, and (when the buckets involved have
+        already been built) a push into the ``new`` bucket so later fits
+        can pop it in index order, plus a stale count on the ``old``
+        bucket unless the caller obtained ``j`` by popping it (an
+        unpopped leaver's entry lingers until a pop discards it)."""
+        h = self._hist[k]
+        h[old] -= 1
+        h[new] += 1
+        gpn = self._gpn[k]
+        if old == gpn:
+            self._empty[k] -= 1
+        if new == gpn:
+            self._empty[k] += 1
+        if 0 < new < gpn and new > self._maxp[k]:
+            self._maxp[k] = new
+        elif 0 < old < gpn and old == self._maxp[k] and h[old] == 0:
+            self._retally(k)
+        buck = self._buck
+        if not popped and old > 0:
+            bo = buck.get(k * self._bkey + old)
+            if bo is not None:
+                bo[3] += 1
+        if new > 0:
+            b = buck.get(k * self._bkey + new)
+            if b is not None:
+                heapq.heappush(b[2], j)
+
+    # --------------------------------------------- cluster capacity mirror
+    @property
+    def cfree(self) -> np.ndarray:
+        """Per-cluster free GPUs as a numpy vector, re-synced from the
+        authoritative python list on read when a fit/release dirtied it.
+        The array object is stable across the overlay's lifetime."""
+        arr = self._cfree_np
+        if self._dirty:
+            arr[:] = self._cfree
+            self._dirty = False
+        return arr
+
+    def _cfree_dec(self, k: int, d: int) -> None:
+        """Consume ``d`` free GPUs on cluster ``k`` and push the new
+        value onto the pick heap."""
+        v = self._cfree[k] = self._cfree[k] - d
+        self._dirty = True
+        heapq.heappush(self._cheap, (-v, k))
+
+    def _cfree_inc(self, k: int, d: int) -> None:
+        """Return ``d`` free GPUs to cluster ``k``."""
+        v = self._cfree[k] = self._cfree[k] + d
+        self._dirty = True
+        heapq.heappush(self._cheap, (-v, k))
+
+    # ------------------------------------------------- free-size buckets
+    def _bucket(self, k: int, f: int) -> list:
+        key = k * self._bkey + f
+        b = self._buck.get(key)
+        if b is None:
+            nm = self.nm
+            lo = int(nm.cluster_lo[k])
+            hi = int(nm.cluster_hi[k])
+            arr = np.flatnonzero(self.free[lo:hi] == f) + lo
+            # [sorted base snapshot, base ptr, late-push heap,
+            #  stale count, base snapshot as an array (for view writes)]
+            b = [arr.tolist(), 0, [], 0, arr]
+            self._buck[key] = b
+        return b
+
+    def _pop_node(self, k: int, f: int) -> int:
+        """Pop the lowest-index cluster-``k`` node currently holding
+        exactly ``f`` free GPUs (-1 if none).  Candidates are validated
+        lazily against ``free``: a popped entry whose free count moved
+        on since it was recorded costs one discard, which keeps pushes
+        unconditional and the snapshot base maintenance-free.  The
+        bucket's stale count tracks discards-to-come exactly, so a
+        zero-stale bucket can be consumed by slicing (see ``fit``)."""
+        b = self._bucket(k, f)
+        base, extra = b[0], b[2]
+        free = self.free
+        nb = len(base)
+        while True:
+            p = b[1]
+            if p < nb:
+                j = base[p]
+                if extra and extra[0] < j:
+                    j = heapq.heappop(extra)
+                else:
+                    b[1] = p + 1
+            elif extra:
+                j = heapq.heappop(extra)
+            else:
+                return -1
+            if free[j] == f:
+                return j
+            b[3] -= 1
+
+    # -------------------------------------------------- release and undo
     def release_row(self, row: int) -> None:
         nm = self.nm
         nodes, gpus = nm.row_pieces(row)
         if nodes.size:
-            self.free[nodes] += gpus
+            free = self.free
             ks = nm.node_cluster[nodes]
-            np.add.at(self.cfree, ks, gpus)
-            self._dirty[np.unique(ks)] = True
-        self.released.append(row)
+            cadd: dict = {}
+            for j, kk, g in zip(nodes.tolist(), ks.tolist(), gpus.tolist()):
+                old = int(free[j])
+                free[j] = old + g
+                cadd[kk] = cadd.get(kk, 0) + g
+                self._move(kk, j, old, old + g)
+            for kk, g in cadd.items():
+                self._cfree_inc(kk, g)
+        self.released.append(int(row))
 
+    def release_rows(self, rows: np.ndarray) -> None:
+        """Release many rows with one span-pool gather, appending to
+        ``released`` in input order — the batched decide core's
+        replacement for a per-row ``release_row`` loop."""
+        rows = np.asarray(rows, np.int64)
+        if rows.size == 0:
+            return
+        nm = self.nm
+        lens = nm.row_len[rows]
+        offs = nm.row_off[rows]
+        total = int(lens.sum())
+        if total:
+            ends = np.cumsum(lens)
+            sl = np.repeat(offs - (ends - lens), lens) + np.arange(total)
+            nodes = nm.span_node[sl]
+            gpus = nm.span_gpus[sl]
+            # one node can carry pieces of several rows: aggregate first
+            un, inv = np.unique(nodes, return_inverse=True)
+            add = np.zeros(un.size, np.int64)
+            np.add.at(add, inv, gpus)
+            free = self.free
+            ks = nm.node_cluster[un]
+            cadd: dict = {}
+            for j, kk, g in zip(un.tolist(), ks.tolist(), add.tolist()):
+                old = int(free[j])
+                free[j] = old + g
+                cadd[kk] = cadd.get(kk, 0) + g
+                self._move(kk, j, old, old + g)
+            for kk, g in cadd.items():
+                self._cfree_inc(kk, g)
+        self.released.extend(int(r) for r in rows)
+
+    def undo(self, idx: int) -> None:
+        """Reverse a fit made earlier this pass (the entry is tombstoned;
+        the caller filters ``assigns`` before committing)."""
+        row, nodes, gpus = self.assigns[idx]
+        free = self.free
+        ncl = self.nm.node_cluster
+        for j, g in zip(nodes, gpus):
+            old = int(free[j])
+            free[j] = old + g
+            kk = int(ncl[j])
+            self._cfree_inc(kk, g)
+            self._move(kk, j, old, old + g)
+        self.assigns[idx] = None
+
+    # ------------------------------------------------ feasibility queries
     def _stats(self, k: int) -> Tuple[int, int]:
-        if self._dirty[k]:
-            nm = self.nm
-            seg = self.free[int(nm.cluster_lo[k]) : int(nm.cluster_hi[k])]
-            gpn = int(nm.cluster_gpn[k])
-            self._empty[k] = int(np.count_nonzero(seg == gpn))
-            part = seg[seg < gpn]
-            self._maxp[k] = int(part.max()) if part.size else 0
-            self._dirty[k] = False
-        return int(self._empty[k]), int(self._maxp[k])
+        return self._empty[k], self._maxp[k]
 
     def feasible(self, k: int, g: int) -> bool:
         """Can cluster ``k`` host a gang of ``g`` as ``w`` full nodes plus
         one remainder piece?"""
-        gpn = int(self.nm.cluster_gpn[k])
+        gpn = self._gpn[k]
         w, r = divmod(int(g), gpn)
-        empty, maxp = self._stats(k)
+        empty = self._empty[k]
         if empty < w:
             return False
-        return r == 0 or maxp >= r or empty >= w + 1
+        return r == 0 or self._maxp[k] >= r or empty >= w + 1
 
     def feasible_vec(self, g: int) -> np.ndarray:
         """``feasible`` for every cluster at once — one vector expression
-        instead of a Python call per cluster (the decide path's per-job
-        pool test)."""
-        for k in np.flatnonzero(self._dirty):
-            self._stats(int(k))
+        over the maintained stats.  The batched core walks
+        ``pick_cluster`` instead; this remains the loop oracle's (and
+        the tests') view."""
         gpn = self.nm.cluster_gpn
         w = g // gpn
         r = g - w * gpn
-        return (self._empty >= w) & (
-            (r == 0) | (self._maxp >= r) | (self._empty >= w + 1)
-        )
+        empty = np.asarray(self._empty, np.int64)
+        maxp = np.asarray(self._maxp, np.int64)
+        return (empty >= w) & ((r == 0) | (maxp >= r) | (empty >= w + 1))
 
     def best_value(self, k: int, demand: int, lo: int, hi: int) -> int:
         """Largest splice-compatible world size in ``[lo, hi]`` that
@@ -565,32 +848,154 @@ class PlacementOverlay:
                 return v
         return 0
 
-    def undo(self, idx: int) -> None:
-        """Reverse a fit made earlier this pass (the entry is tombstoned;
-        the caller filters ``assigns`` before committing)."""
-        row, nodes, gpus = self.assigns[idx]
-        ns = np.asarray(nodes, np.int64)
-        gs = np.asarray(gpus, np.int64)
-        self.free[ns] += gs
-        ks = self.nm.node_cluster[ns]
-        np.add.at(self.cfree, ks, gs)
-        self._dirty[np.unique(ks)] = True
-        self.assigns[idx] = None
+    # --------------------------------------------------- cluster picking
+    def best_cluster(self) -> int:
+        """``argmax(cfree)`` (lowest index on ties)."""
+        best = -1
+        bestv = -1
+        for c, v in enumerate(self._cfree):
+            if v > bestv:
+                best, bestv = c, v
+        return best
 
+    def best_healthy(self, drain: Sequence[bool]) -> int:
+        """``argmax(cfree)`` over non-draining clusters (lowest index on
+        ties); -1 when every cluster is draining."""
+        best = -1
+        bestv = -1
+        for c, v in enumerate(self._cfree):
+            if v > bestv and not drain[c]:
+                best, bestv = c, v
+        return best
+
+    def pick_cluster(
+        self,
+        g: int,
+        drain: Optional[Sequence[bool]] = None,
+        want_region: int = -1,
+        creg: Optional[Sequence[int]] = None,
+    ) -> int:
+        """The batched core's pool pick: the max-``cfree`` cluster
+        (lowest index on ties) passing the oracle's pool filters.
+
+        Stage 1 considers gang-feasible clusters; stage 2 (when no
+        cluster is gang-feasible) accepts aggregate capacity
+        ``cfree >= g``.  ``drain`` soft-excludes draining clusters when
+        a non-draining candidate exists; ``want_region`` (with ``creg``,
+        cluster→region codes) soft-prefers a running job's current
+        region within whatever pool survives the drain filter.  Each
+        preference is dropped, not enforced, when it can't be met —
+        byte-for-byte the oracle's nested ``pool``-masking followed by
+        ``argmax(where(pool, cfree, -1))``, whose ties break to the
+        lowest index.  Returns -1 when even aggregate capacity is
+        missing everywhere.
+
+        The unfiltered query pops the lazy max-heap: heads whose entry
+        no longer matches the live ``cfree`` mirror are discarded, the
+        first feasible valid head is the answer, and valid-but-
+        infeasible heads are stashed and pushed back — so the usual
+        pick costs one or two probes, not a K-cluster scan."""
+        g = int(g)
+        if drain is not None or want_region >= 0:
+            k = self._pick_filtered(g, drain, want_region, creg, True)
+            if k >= 0:
+                return k
+            return self._pick_filtered(g, drain, want_region, creg, False)
+        cf = self._cfree
+        heap = self._cheap
+        empty = self._empty
+        maxp = self._maxp
+        gpnl = self._gpn
+        found = -1
+        stash = None
+        while heap:
+            v, c = heap[0]
+            if cf[c] != -v:
+                heapq.heappop(heap)  # stale (or duplicate) entry
+                continue
+            gpn = gpnl[c]
+            w = g // gpn
+            r = g - w * gpn
+            e = empty[c]
+            if e >= w and (r == 0 or maxp[c] >= r or e > w):
+                found = c
+                break
+            if stash is None:
+                stash = []
+            stash.append(heapq.heappop(heap))
+        if stash:
+            for e in stash:
+                heapq.heappush(heap, e)
+        if found >= 0:
+            return found
+        # stage 2: scattered fill wherever aggregate capacity fits
+        best = -1
+        bestv = g - 1
+        for c, v in enumerate(cf):
+            if v > bestv:
+                best, bestv = c, v
+        return best
+
+    def _pick_filtered(
+        self,
+        g: int,
+        drain: Optional[Sequence[bool]],
+        want_region: int,
+        creg: Optional[Sequence[int]],
+        gang: bool,
+    ) -> int:
+        """One filtered scan: the argmax candidate under each surviving
+        preference combination, resolved exactly as the oracle's pool
+        masking does."""
+        feasible = self.feasible
+        best = b_nd = b_sr = b_sr_nd = -1
+        bv = b_nd_v = b_sr_v = b_sr_nd_v = -1
+        for c, v in enumerate(self._cfree):
+            if gang:
+                if not feasible(c, g):
+                    continue
+            elif v < g:
+                continue
+            if v > bv:
+                best, bv = c, v
+            nd = drain is None or not drain[c]
+            if nd and v > b_nd_v:
+                b_nd, b_nd_v = c, v
+            if want_region >= 0 and creg[c] == want_region:
+                if v > b_sr_v:
+                    b_sr, b_sr_v = c, v
+                if nd and v > b_sr_nd_v:
+                    b_sr_nd, b_sr_nd_v = c, v
+        if best < 0:
+            return -1
+        if drain is not None and b_nd >= 0:
+            if want_region >= 0 and b_sr_nd >= 0:
+                return b_sr_nd
+            return b_nd
+        if want_region >= 0 and b_sr >= 0:
+            return b_sr
+        return best
+
+    # --------------------------------------------------------------- fits
     def fit_any(self, row: int, k: int, g: int) -> None:
         """Place a gang that fits the cluster's aggregate free capacity:
         the clean shape (``fit``) when feasible, else a scattered fill —
-        largest holes first (lowest index on ties), which minimizes the
-        piece count.  The device-proxy makes scattered placement legal;
-        it is merely the low-locality fallback the defragmentation pass
-        exists to avoid."""
-        if self.feasible(k, g):
-            self.fit(row, k, g)
+        largest holes first (lowest node index on ties, pinned by a
+        stable sort), which minimizes the piece count.  The device-proxy
+        makes scattered placement legal; it is merely the low-locality
+        fallback the defragmentation pass exists to avoid."""
+        g = int(g)
+        gpn = self._gpn[k]
+        w = g // gpn
+        r = g - w * gpn
+        empty = self._empty[k]
+        if empty >= w and (r == 0 or self._maxp[k] >= r or empty > w):
+            self._fit_shaped(row, k, g, gpn, w, r)
             return
         nm = self.nm
         lo, hi = int(nm.cluster_lo[k]), int(nm.cluster_hi[k])
         seg = self.free[lo:hi]
-        order = np.lexsort((np.arange(seg.size), -seg))
+        order = np.argsort(-seg, kind="stable")
         nodes: List[int] = []
         gpus: List[int] = []
         rem = int(g)
@@ -600,45 +1005,135 @@ class PlacementOverlay:
                 break
             nodes.append(lo + int(j))
             gpus.append(take)
+            old = int(seg[j])
             seg[j] -= take
+            self._move(k, lo + int(j), old, old - take)
             rem -= take
             if rem == 0:
                 break
         assert rem == 0, "fit_any() without aggregate capacity"
-        self.cfree[k] -= int(g)
-        self._dirty[k] = True
+        self._cfree_dec(k, int(g))
         self.assigns.append((row, nodes, gpus))
 
     def fit(self, row: int, k: int, g: int) -> None:
         """Place a feasible gang: full pieces on the lowest-index empty
         nodes, the remainder best-fit into the smallest sufficient
         partial hole (lowest index on ties; the next empty node when no
-        partial hole fits)."""
-        nm = self.nm
-        lo, hi = int(nm.cluster_lo[k]), int(nm.cluster_hi[k])
-        gpn = int(nm.cluster_gpn[k])
-        w, r = divmod(int(g), gpn)
-        seg = self.free[lo:hi]  # view: writes land in self.free
+        partial hole fits).  The best-fit hole size comes straight from
+        the histogram, and each node comes from a bucket pop — no
+        candidate scan over the segment."""
+        g = int(g)
+        gpn = self._gpn[k]
+        w = g // gpn
+        self._fit_shaped(row, k, g, gpn, w, g - w * gpn)
+
+    def _fit_shaped(
+        self, row: int, k: int, g: int, gpn: int, w: int, r: int
+    ) -> None:
+        free = self.free
         nodes: List[int] = []
         gpus: List[int] = []
+        h = self._hist[k]
         if w:
-            empt = np.flatnonzero(seg == gpn)[:w]
-            assert empt.size == w, "fit() without feasibility"
-            for j in empt:
-                nodes.append(lo + int(j))
-                gpus.append(gpn)
-            seg[empt] -= gpn
-        if r:
-            cand = np.flatnonzero((seg < gpn) & (seg >= r))
-            if cand.size:
-                j = int(cand[np.lexsort((cand, seg[cand]))[0]])
+            # inline bulk pop: drain the empty-node bucket in index
+            # order with one bucket fetch for the whole gang
+            b = self._buck.get(k * self._bkey + gpn)
+            if b is None:
+                b = self._bucket(k, gpn)
+            base, extra = b[0], b[2]
+            p = b[1]
+            if not extra and not b[3] and len(base) - p >= w:
+                # exact bucket, no late pushes: the next w base entries
+                # ARE the w lowest-index empties — consume by slice and
+                # zero their free counts in one array-view fancy write
+                nodes = base[p : p + w]
+                b[1] = p + w
+                free[b[4][p : p + w]] = 0
             else:
-                rest = np.flatnonzero(seg == gpn)
-                assert rest.size, "fit() without feasibility"
-                j = int(rest[0])
-            nodes.append(lo + j)
+                nb = len(base)
+                take = 0
+                while take < w:
+                    p = b[1]
+                    if extra and (p >= nb or extra[0] < base[p]):
+                        j = heapq.heappop(extra)
+                    else:
+                        assert p < nb, "fit() without feasibility"
+                        j = base[p]
+                        b[1] = p + 1
+                    if free[j] == gpn:
+                        free[j] = 0
+                        nodes.append(j)
+                        take += 1
+                    else:
+                        b[3] -= 1
+            gpus = [gpn] * w
+            h[gpn] -= w
+            h[0] += w
+            self._empty[k] -= w
+        if r:
+            f = 0
+            for b in range(r, gpn):
+                if h[b]:
+                    f = b
+                    break
+            if f:
+                j = self._pop_node(k, f)
+                assert j >= 0, "fit() without feasibility"
+                free[j] = f - r
+                self._move(k, j, f, f - r, popped=True)
+            else:
+                j = self._pop_node(k, gpn)
+                assert j >= 0, "fit() without feasibility"
+                free[j] = gpn - r
+                self._move(k, j, gpn, gpn - r, popped=True)
+            nodes.append(j)
             gpus.append(r)
-            seg[j] -= r
-        self.cfree[k] -= int(g)
-        self._dirty[k] = True
+        self._cfree_dec(k, int(g))
         self.assigns.append((row, nodes, gpus))
+
+    def fit_batch(self, rows: np.ndarray, ks: np.ndarray, gs: np.ndarray) -> None:
+        """Sequentially-equivalent batch fit: exactly one ``fit_any`` per
+        item, in order, appending one assign each — but runs of identical
+        (cluster, whole-node gang) items collapse into a single
+        empty-node slice.  Consecutive shaped whole-node fits each take
+        the next lowest-index empties, so the slice IS the sequential
+        answer; items past the run's empty budget fall back to the
+        per-item path (scattered fill), exactly as the loop would."""
+        n = len(rows)
+        i = 0
+        while i < n:
+            k = int(ks[i])
+            g = int(gs[i])
+            gpn = self._gpn[k]
+            w, r = divmod(g, gpn)
+            if r == 0 and w > 0:
+                j = i + 1
+                while j < n and int(ks[j]) == k and int(gs[j]) == g:
+                    j += 1
+                m = min(j - i, self._empty[k] // w)
+                if m > 0:
+                    lo = int(self.nm.cluster_lo[k])
+                    hi = int(self.nm.cluster_hi[k])
+                    seg = self.free[lo:hi]
+                    empt = np.flatnonzero(seg == gpn)[: m * w]
+                    seg[empt] = 0
+                    bb = self._buck.get(k * self._bkey + gpn)
+                    if bb is not None:
+                        # consumed without popping: their bucket entries
+                        # (if the bucket predates this call) linger
+                        bb[3] += m * w
+                    h = self._hist[k]
+                    h[gpn] -= m * w
+                    h[0] += m * w
+                    self._empty[k] -= m * w
+                    self._cfree_dec(k, m * g)
+                    whole = [gpn] * w
+                    for t in range(m):
+                        ns = [lo + int(x) for x in empt[t * w : (t + 1) * w]]
+                        self.assigns.append((int(rows[i + t]), ns, list(whole)))
+                for t in range(i + m, j):
+                    self.fit_any(int(rows[t]), k, int(gs[t]))
+                i = j
+            else:
+                self.fit_any(int(rows[i]), k, g)
+                i += 1

@@ -86,6 +86,7 @@ from repro.core.sla import TIERS, FleetSlotAccount
 from repro.scheduler.costs import CostModel
 from repro.scheduler.job_table import TIER_CODE, JobView, shared_table
 from repro.scheduler.node_map import (
+    floor_gang,
     gang_down,
     gang_down_vec,
     gang_values,
@@ -304,6 +305,7 @@ class ElasticPolicy:
         vectorized: bool = True,
         aging_rate: Union[float, Mapping[str, float]] = 1.0,
         aging_threshold_intervals: float = 12.0,
+        node_batch: bool = True,
     ):
         self.expand_factor = expand_factor
         # threaded in by FleetSimulator/FleetExecutor when left unset, so
@@ -311,6 +313,9 @@ class ElasticPolicy:
         self.cost_model = cost_model
         self.interval_hint = interval_hint
         self.vectorized = vectorized
+        # node placement core: batched array passes (production) or the
+        # per-job loop oracle the batched core is digest-checked against
+        self.node_batch = node_batch
         # fairness aging: a guaranteed job queued longer than
         # aging_threshold_intervals ticks accrues aging_rate cost-seconds
         # of admission credit per excess second; 0 disables aging.  A
@@ -331,6 +336,9 @@ class ElasticPolicy:
         # _decide_vectorized (the base-array build, or the JobTable
         # column slicing that replaces it); benchmarks report the split
         self.gather_seconds = 0.0
+        # wall seconds spent inside the node-granular placement pass
+        # (a subset of decide time); benchmarks gate it separately
+        self.node_seconds = 0.0
 
     def bind_costs(self, cost_model: CostModel, interval_hint: float) -> None:
         """Thread the driver's charged cost model and tick length into
@@ -814,6 +822,53 @@ class ElasticPolicy:
         creg: np.ndarray,
         drain: np.ndarray,
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, tuple]:
+        """Node placement entry for both decide paths: dispatch to the
+        batched core (production) or the per-job loop it is
+        digest-checked against (``node_batch=False``), accumulating the
+        node-pass share of decide time in ``node_seconds``."""
+        t0 = time.perf_counter()
+        try:
+            core = (
+                self._place_nodes_batched
+                if self.node_batch
+                else self._place_nodes_loop
+            )
+            return core(
+                nm,
+                active,
+                rows,
+                galloc,
+                min_g,
+                demand,
+                prio,
+                running,
+                preempt,
+                jcl,
+                has_cluster,
+                jreg,
+                creg,
+                drain,
+            )
+        finally:
+            self.node_seconds += time.perf_counter() - t0
+
+    def _place_nodes_loop(
+        self,
+        nm,
+        active: List[Job],
+        rows: np.ndarray,
+        galloc: np.ndarray,
+        min_g: np.ndarray,
+        demand: np.ndarray,
+        prio: np.ndarray,
+        running: np.ndarray,
+        preempt: np.ndarray,
+        jcl: np.ndarray,
+        has_cluster: np.ndarray,
+        jreg: np.ndarray,
+        creg: np.ndarray,
+        drain: np.ndarray,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, tuple]:
         """Node-granular placement over a ``PlacementOverlay``.
 
         Grants arrive gang-rounded.  An unchanged running job whose span
@@ -831,10 +886,15 @@ class ElasticPolicy:
         fragmentation metric and defrag pass track).  Only when no
         cluster fits the gang even scattered does the job shrink down
         the splice-compatible ladder into the best healthy cluster
-        (preempted below its floor).  Both decide
-        paths run this very routine on identically-derived inputs, so
-        span plans — and therefore failure blast radii — cannot drift
-        between the scalar oracle and the vectorized path."""
+        (preempted below its floor).
+
+        This per-job loop is the placement ORACLE: the batched core
+        (``_place_nodes_batched``, the production path) must reproduce
+        its plans byte-for-byte — the digest equivalence gates pin the
+        two against each other on every bench trace.  Both decide paths
+        dispatch here on identically-derived inputs, so span plans — and
+        therefore failure blast radii — cannot drift between the scalar
+        oracle and the vectorized path."""
         n = galloc.size
         idx = np.arange(n)
         order_p = np.lexsort((idx, -galloc, -prio))
@@ -985,6 +1045,241 @@ class ElasticPolicy:
                 preempt[i] = False
                 if running[i] and has_cluster[i] and k != int(jcl[i]):
                     migrate[i] = True
+        assigns = [a for a in ov.assigns if a is not None]
+        return galloc, placed, preempt, migrate, (nm, ov.released, assigns)
+
+    def _place_nodes_batched(
+        self,
+        nm,
+        active: List[Job],
+        rows: np.ndarray,
+        galloc: np.ndarray,
+        min_g: np.ndarray,
+        demand: np.ndarray,
+        prio: np.ndarray,
+        running: np.ndarray,
+        preempt: np.ndarray,
+        jcl: np.ndarray,
+        has_cluster: np.ndarray,
+        jreg: np.ndarray,
+        creg: np.ndarray,
+        drain: np.ndarray,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, tuple]:
+        """Batched node placement: byte-identical plans to the per-job
+        loop oracle (``_place_nodes_loop``), derived as array passes.
+
+        Three exact reductions carry the phases:
+
+        * Phase A — the oracle keeps a changed job on its own cluster
+          when ``feasible(k, g) or cfree[k] >= g``; a feasible gang
+          always fits the aggregate, so the test is just
+          ``cfree[k] >= g`` and the per-cluster admissions are the same
+          cumsum greedy (``_greedy_take``) the cluster-granular stay-put
+          pass uses.  The winning fits replay in changed order through
+          ``fit_batch``, which collapses runs of identical whole-node
+          shapes into slices.
+        * Phase B keeps the oracle's loop shape (its trip count is
+          bounded by jobs holding GPUs, not queue depth), but the pool
+          pick is ``PlacementOverlay.pick_cluster``, which answers the
+          oracle's ``argmax(where(pool, cfree, -1))`` (argmax ties
+          break low) by walking a lazily-validated max-heap of
+          ``(-cfree, k)`` entries — the heap order *is* the argmax
+          order, so the first gang-feasible valid head is the answer —
+          with a K-cluster scan only for drain/region-filtered picks.
+        * Phase C — a candidate acts only when a watched capacity
+          counter reaches its precomputed threshold: growth of a placed
+          job fires iff its cluster's free count covers the next rung of
+          its divisor ladder, admission of a queued job fires iff the
+          fleet-wide max cluster free covers its smallest admissible
+          gang (``floor_gang``).  Phase C only consumes capacity, so the
+          counters are non-increasing between visits: a chunked scan
+          against chunk-start counters passes a superset of the oracle's
+          actors, and each hit re-runs the oracle's own body, which
+          rejects exactly the stale ones.  The 1M-job scan thus touches
+          Python only for jobs that actually grow or admit."""
+        n = galloc.size
+        idx = np.arange(n)
+        order_p = np.lexsort((idx, -galloc, -prio))
+        any_drain = bool(drain.any())
+        no_stay = np.zeros(n, dtype=bool)
+        if any_drain:
+            on_draining = (
+                (jcl >= 0) & running & (galloc > 0) & drain[np.maximum(jcl, 0)]
+            )
+            for i in np.flatnonzero(on_draining):
+                no_stay[i] = self._proactive_move(active[i])
+
+        ov = nm.overlay()
+        has_span, span_k, span_tot = nm.row_state(rows)
+        placed = np.full(n, -1, dtype=np.int64)
+        migrate = np.zeros(n, dtype=bool)
+        kept = (
+            (galloc > 0)
+            & has_span
+            & (span_k == jcl)
+            & (span_tot == galloc)
+            & ~no_stay
+        )
+        placed[kept] = jcl[kept]
+        ov.release_rows(rows[has_span & ~kept])
+
+        changed = order_p[(galloc[order_p] > 0) & ~kept[order_p]]
+        fresh: dict = {}  # job index -> its entry in ov.assigns
+        # phase A: per-cluster cumsum greedy over the changed jobs that
+        # may stay put, then one fit_batch replay in changed order
+        staying = np.zeros(n, dtype=bool)
+        elig = changed[(jcl[changed] >= 0) & ~no_stay[changed]]
+        if elig.size:
+            for k in np.unique(jcl[elig]):
+                sel = elig[jcl[elig] == k]
+                g, _ = _greedy_take(
+                    galloc[sel], galloc[sel], int(ov.cfree[k]), partial=False
+                )
+                staying[sel[g > 0]] = True
+            st = changed[staying[changed]]
+            if st.size:
+                placed[st] = jcl[st]
+                base = len(ov.assigns)
+                ov.fit_batch(rows[st], jcl[st], galloc[st])
+                for t, i in enumerate(st):
+                    fresh[int(i)] = base + t
+        # phase B: residual pool picks — the oracle loop's pool filters,
+        # but each pick is the overlay's heap-walk pick_cluster instead
+        # of K-wide vector math, and the per-job columns are
+        # pre-gathered to python lists so the loop never touches numpy
+        # scalars
+        drain_l = drain.tolist() if any_drain else None
+        all_drain = bool(drain.all()) if any_drain else False
+        creg_l = creg.tolist()
+        ch_l = changed.tolist()
+        stay_l = staying[changed].tolist()
+        g_l = galloc[changed].tolist()
+        run_l = running[changed].tolist()
+        jreg_l = jreg[changed].tolist()
+        rows_l = rows[changed].tolist()
+        jcl_l = jcl[changed].tolist()
+        hasc_l = has_cluster[changed].tolist()
+        for t, i in enumerate(ch_l):
+            if stay_l[t]:
+                continue
+            g = g_l[t]
+            want = jreg_l[t] if run_l[t] and jreg_l[t] >= 0 else -1
+            k = ov.pick_cluster(g, drain_l, want, creg_l)
+            if k < 0:
+                if any_drain and not all_drain:
+                    k = ov.best_healthy(drain_l)
+                    v = gang_down(min(g, ov._cfree[k]), int(demand[i]))
+                    if v < int(min_g[i]):
+                        k = ov.best_cluster()
+                        v = gang_down(min(g, ov._cfree[k]), int(demand[i]))
+                else:
+                    k = ov.best_cluster()
+                    v = gang_down(min(g, ov._cfree[k]), int(demand[i]))
+                if v < int(min_g[i]):
+                    v = 0
+                if v == 0:
+                    galloc[i] = 0
+                    if run_l[t]:
+                        preempt[i] = True
+                    continue
+                galloc[i] = v
+                g = v
+            ov.fit_any(rows_l[t], k, g)
+            placed[i] = k
+            fresh[i] = len(ov.assigns) - 1
+            if run_l[t] and hasc_l[t] and k != jcl_l[t]:
+                migrate[i] = True
+        # phase C: work conservation as a threshold scan (see docstring)
+        left = int(ov.cfree.sum())
+        if left > 0:
+            cand = order_p[
+                (placed[order_p] < 0) | (galloc[order_p] < demand[order_p])
+            ]
+            never = np.int64(2**62)
+            thr = np.full(cand.size, never)
+            wk = np.full(cand.size, -1, np.int64)
+            grow = placed[cand] >= 0
+            gi = cand[grow]
+            if gi.size:
+                wk[grow] = placed[gi]
+                gg = galloc[gi]
+                dd = demand[gi]
+                delta = np.empty(gi.size, np.int64)
+                for d in np.unique(dd):
+                    m = dd == d
+                    divs = np.asarray(splice_divisors(int(d)), np.int64)
+                    # next compatible world size above the current grant
+                    delta[m] = (
+                        divs[np.searchsorted(divs, gg[m], side="right")] - gg[m]
+                    )
+                thr[grow] = delta
+            ai = cand[~grow]
+            if ai.size:
+                dd = demand[ai]
+                mm = np.maximum(1, min_g[ai])
+                base_m = int(mm.max()) + 1
+                uk, inv = np.unique(dd * base_m + mm, return_inverse=True)
+                ut = np.fromiter(
+                    (floor_gang(int(u) // base_m, int(u) % base_m) for u in uk),
+                    np.int64,
+                    uk.size,
+                )
+                tau = ut[inv]
+                thr[~grow] = np.where(tau > 0, tau, never)
+            ch = 4096
+            pos = 0
+            while pos < cand.size and left > 0:
+                lim = min(pos + ch, cand.size)
+                cw = wk[pos:lim]
+                m_free = int(ov.cfree.max())
+                cur = np.where(cw >= 0, ov.cfree[np.maximum(cw, 0)], m_free)
+                for i in cand[pos:lim][cur >= thr[pos:lim]]:
+                    if left <= 0:
+                        break
+                    k = int(placed[i])
+                    if k >= 0:
+                        if galloc[i] >= demand[i]:
+                            continue
+                        rem = int(ov.cfree[k])
+                        if rem <= 0:
+                            continue
+                        g = int(galloc[i])
+                        hi_v = min(int(demand[i]), g + rem)
+                        lad = gang_values(int(demand[i]), g + 1, hi_v)
+                        if not lad:
+                            continue
+                        v = int(lad[0])
+                        ii = int(i)
+                        if ii in fresh:
+                            ov.undo(fresh[ii])
+                        else:
+                            ov.release_row(int(rows[i]))
+                        ov.fit_any(int(rows[i]), k, v)
+                        fresh[ii] = len(ov.assigns) - 1
+                        galloc[i] = v
+                        left -= v - g
+                        continue
+                    d_i, m_i = int(demand[i]), int(min_g[i])
+                    if any_drain and not drain.all():
+                        k = int(np.argmax(np.where(~drain, ov.cfree, -1)))
+                        v = gang_down(int(min(d_i, ov.cfree[k])), d_i)
+                        if v < m_i:
+                            k = int(np.argmax(ov.cfree))
+                            v = gang_down(int(min(d_i, ov.cfree[k])), d_i)
+                    else:
+                        k = int(np.argmax(ov.cfree))
+                        v = gang_down(int(min(d_i, ov.cfree[k])), d_i)
+                    if v <= 0 or v < m_i:
+                        continue
+                    ov.fit_any(int(rows[i]), k, v)
+                    fresh[int(i)] = len(ov.assigns) - 1
+                    placed[i] = k
+                    galloc[i] = v
+                    left -= v
+                    preempt[i] = False
+                    if running[i] and has_cluster[i] and k != int(jcl[i]):
+                        migrate[i] = True
+                pos = lim
         assigns = [a for a in ov.assigns if a is not None]
         return galloc, placed, preempt, migrate, (nm, ov.released, assigns)
 

@@ -153,14 +153,32 @@ class TrafficTrace:
                 mult = np.maximum(mult, 1.0 + (amp - 1.0) * shape)
             qps[s] = curve * mult
         self.qps = qps
+        # last instant the trace covers; queries beyond it are errors,
+        # not a silent flat replay of the final sample
+        self.end_seconds = float((n - 1) * self.sample_seconds)
+
+    def _check_start(self, t: float, what: str) -> None:
+        if t > self.end_seconds:
+            raise ValueError(
+                f"traffic trace ends at t={self.end_seconds:.0f}s but "
+                f"{what} t={t:.0f}s — build the trace with a horizon "
+                "covering the simulation"
+            )
 
     def at(self, now: float) -> np.ndarray:
-        """Per-service qps observed at wall time ``now``."""
+        """Per-service qps observed at wall time ``now``.  Raises
+        ``ValueError`` past the trace end instead of replaying the final
+        sample forever."""
+        self._check_start(now, "queried at")
         i = min(int(now / self.sample_seconds), self.qps.shape[1] - 1)
         return self.qps[:, i]
 
     def window_peak(self, t0: float, t1: float) -> np.ndarray:
-        """Per-service max qps over samples in ``[t0, t1]``."""
+        """Per-service max qps over samples in ``[t0, t1]``.  The window
+        START must lie inside the trace; ``t1`` may overhang the end by
+        part of one scheduler tick (the final in-simulation window), in
+        which case the peak covers the samples that exist."""
+        self._check_start(t0, "window starts at")
         i0 = max(0, int(t0 / self.sample_seconds))
         i1 = min(int(math.ceil(t1 / self.sample_seconds)), self.qps.shape[1] - 1)
         return self.qps[:, i0 : i1 + 1].max(axis=1)

@@ -685,10 +685,8 @@ class FleetSimulator:
         plan = decision.node_plan
         if plan is not None and plan[0] is nm:
             _, released, assigns = plan
-            for row in released:
-                nm.release(row)
-            for row, nodes, gpus in assigns:
-                nm.assign(row, nodes, gpus)
+            nm.release_many(np.asarray(released, np.int64))
+            nm.assign_many(assigns)
             return
         for jid, (g, cid) in decision.alloc.items():
             j = self.jobs[jid]

@@ -1,0 +1,376 @@
+"""Batched node-placement core: exact equivalence against the per-job
+loop oracle, and the overlay machinery it leans on.
+
+The decide-pass node pass (`ElasticPolicy._place_nodes`) dispatches to a
+batched core built from array passes (`_place_nodes_batched`); the old
+per-job loop survives as `_place_nodes_loop`, the oracle.  These tests
+pin the contract that made the rewrite safe:
+
+- full-simulation digest equivalence batched == loop, spans included,
+  storm on and off, over both job representations;
+- `PlacementOverlay.fit_batch` / `release_rows` replay exactly the
+  sequential `fit_any` / `release_row` calls they batch;
+- the overlay's histogram-backed incremental stats always agree with a
+  brute-force rescan of the segment;
+- `fit_any`'s scattered order is pinned (stable sort, lowest node index
+  on ties) so decision digests cannot drift across numpy versions;
+- degenerate gang-helper inputs (`min_gpus > demand`, zero demand) are
+  clamped, property-tested against brute force;
+- `PlacementOverlay.undo` tombstones survive span-pool compaction: a
+  mid-decide `_compact` must not resurrect released or undone spans;
+- `NodeMap.release_many`/`assign_many` commit a plan identically to the
+  sequential release/assign loop.
+"""
+
+import hashlib
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.scheduler.costs import CostModel
+from repro.scheduler.node_map import (
+    NodeMap,
+    floor_gang,
+    gang_values,
+    min_piece,
+    splice_divisors,
+)
+from repro.scheduler.policy import ElasticPolicy
+from repro.scheduler.reliability import FailureModel, FailureTrace
+from repro.scheduler.simulator import (
+    FleetSimulator,
+    SimConfig,
+    make_fleet,
+    synth_workload,
+)
+from repro.scheduler.types import Cluster, Fleet, Region
+
+
+class _PlanDigestPolicy:
+    """Hashes every decision INCLUDING its node span plan (the
+    test_node_map recipe), so batched-vs-oracle drift in any span is
+    fatal, not hidden behind identical aggregate allocations."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.name = inner.name
+        self.digest = hashlib.sha256()
+
+    def bind_costs(self, cost_model, interval_hint):
+        self.inner.bind_costs(cost_model, interval_hint)
+
+    def decide(self, now, jobs, fleet):
+        decision = self.inner.decide(now, jobs, fleet)
+        plan = decision.node_plan
+        spans = None
+        if plan is not None:
+            _, released, assigns = plan
+            spans = (
+                sorted(released),
+                [(r, list(n), list(g)) for r, n, g in assigns],
+            )
+        self.digest.update(
+            repr(
+                (
+                    sorted(decision.alloc.items()),
+                    decision.preemptions,
+                    decision.migrations,
+                    spans,
+                )
+            ).encode()
+        )
+        return decision
+
+
+def _storm_run(node_batch: bool, job_table: bool) -> tuple:
+    fleet = make_fleet(n_regions=2, clusters_per_region=2, gpus_per_cluster=256)
+    storm = FailureTrace.merge(
+        FailureModel(
+            device_mtbf_seconds=10 * 24 * 3600.0,
+            node_mtbf_seconds=15 * 24 * 3600.0,
+            cluster_mtbf_seconds=45 * 24 * 3600.0,
+            seed=11,
+        ).sample(fleet, 12 * 3600.0),
+        FailureTrace.cluster_outage("r0c0", at=4 * 3600.0),
+    )
+    wrapper = _PlanDigestPolicy(ElasticPolicy(node_batch=node_batch))
+    sim = FleetSimulator(
+        fleet,
+        synth_workload(80, fleet.total(), seed=5, mean_interarrival=180.0),
+        wrapper,
+        SimConfig(
+            horizon_seconds=12 * 3600.0,
+            cost_model=CostModel(),
+            failures=storm,
+            validate=True,  # per-node conservation asserted every tick
+            job_table=job_table,
+        ),
+    )
+    res = sim.run()
+    return res, wrapper.digest.hexdigest()
+
+
+def test_batched_equals_loop_oracle_under_storm():
+    res_b, dig_b = _storm_run(node_batch=True, job_table=True)
+    res_l, dig_l = _storm_run(node_batch=False, job_table=True)
+    res_p, dig_p = _storm_run(node_batch=True, job_table=False)
+    assert res_b.job_failures > 0  # the storm actually stormed
+    assert dig_b == dig_l == dig_p
+    assert res_b.utilization == res_l.utilization
+    assert (res_b.preemptions, res_b.migrations, res_b.resizes) == (
+        res_l.preemptions,
+        res_l.migrations,
+        res_l.resizes,
+    )
+
+
+def test_batched_equals_loop_oracle_calm_sea():
+    digests = {}
+    for nb in (True, False):
+        fleet = make_fleet(n_regions=2, clusters_per_region=2, gpus_per_cluster=256)
+        wrapper = _PlanDigestPolicy(ElasticPolicy(node_batch=nb))
+        sim = FleetSimulator(
+            fleet,
+            synth_workload(60, fleet.total(), seed=2, mean_interarrival=240.0),
+            wrapper,
+            SimConfig(horizon_seconds=8 * 3600.0, validate=True),
+        )
+        sim.run()
+        digests[nb] = wrapper.digest.hexdigest()
+    assert digests[True] == digests[False]
+
+
+# ----------------------------------------- overlay batched-op equivalence
+def _toy_map(caps=(48, 20), gpn=8, rows=16) -> NodeMap:
+    fleet = Fleet(
+        [
+            Region(
+                "r0",
+                [
+                    Cluster(f"r0c{k}", "r0", c, gpus_per_node=gpn)
+                    for k, c in enumerate(caps)
+                ],
+            )
+        ]
+    )
+    return NodeMap.from_fleet(fleet, capacity_rows=rows)
+
+
+def _occupy(nm: NodeMap, rng, rows: int) -> list:
+    """Scatter some rows into the map so overlays start non-trivial."""
+    placed = []
+    for row in range(rows):
+        k = int(rng.integers(0, nm.n_clusters))
+        free = int(nm.cluster_free_vector()[k])
+        if free <= 0:
+            continue
+        nm.auto_fit(row, k, int(rng.integers(1, free + 1)))
+        placed.append(row)
+    return placed
+
+
+def _stats_brute(ov, k: int):
+    nm = ov.nm
+    seg = ov.free[int(nm.cluster_lo[k]) : int(nm.cluster_hi[k])]
+    gpn = int(nm.cluster_gpn[k])
+    empty = int(np.count_nonzero(seg == gpn))
+    part = seg[seg < gpn]
+    return empty, (int(part.max()) if part.size else 0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 100_000), n_ops=st.integers(1, 40))
+def test_overlay_hist_stats_match_brute_force(seed, n_ops):
+    """The incrementally-maintained (empty, maxp) stats agree with a
+    rescan of the free-count segment after every fit/release/undo."""
+    rng = np.random.Generator(np.random.Philox(seed))
+    nm = _toy_map()
+    placed = _occupy(nm, rng, 8)
+    ov = nm.overlay()
+    next_row = 100
+    fits = []
+    for _ in range(n_ops):
+        op = int(rng.integers(0, 3))
+        if op == 0:
+            k = int(rng.integers(0, nm.n_clusters))
+            free = int(ov.cfree[k])
+            if free > 0:
+                ov.fit_any(next_row, k, int(rng.integers(1, free + 1)))
+                fits.append(len(ov.assigns) - 1)
+                next_row += 1
+        elif op == 1 and placed:
+            ov.release_row(placed.pop())
+        elif op == 2 and fits:
+            idx = fits.pop(int(rng.integers(0, len(fits))))
+            ov.undo(idx)
+        for k in range(nm.n_clusters):
+            assert ov._stats(k) == _stats_brute(ov, k), (seed, k)
+        assert bool(ov.feasible(0, 8)) == (
+            _stats_brute(ov, 0)[0] >= 1
+        )  # whole-node gang sanity
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 100_000), n_fits=st.integers(1, 24))
+def test_fit_batch_replays_sequential_fit_any(seed, n_fits):
+    rng = np.random.Generator(np.random.Philox(seed))
+    nm = _toy_map(caps=(64, 48, 20))
+    _occupy(nm, rng, int(rng.integers(0, 6)))
+    # one shared request sequence; runs of whole-node shapes appear often
+    reqs = []
+    a, b = nm.overlay(), nm.overlay()
+    for t in range(n_fits):
+        k = int(rng.integers(0, nm.n_clusters))
+        gpn = int(nm.cluster_gpn[k])
+        free = int(a.cfree[k])
+        if free <= 0:
+            continue
+        if rng.random() < 0.6:  # whole-node gang (exercises the run path)
+            w = int(rng.integers(1, max(1, free // gpn) + 1))
+            g = min(free, w * gpn)
+            if g == 0 or g % gpn:
+                g = min(free, gpn) if free >= gpn else free
+        else:
+            g = int(rng.integers(1, free + 1))
+        reqs.append((200 + t, k, g))
+        a.fit_any(200 + t, k, g)
+    if not reqs:
+        return
+    rows = np.array([r for r, _, _ in reqs], np.int64)
+    ks = np.array([k for _, k, _ in reqs], np.int64)
+    gs = np.array([g for _, _, g in reqs], np.int64)
+    b.fit_batch(rows, ks, gs)
+    assert a.assigns == b.assigns
+    assert (a.free == b.free).all()
+    assert (a.cfree == b.cfree).all()
+    for k in range(nm.n_clusters):
+        assert a._stats(k) == b._stats(k)
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_release_rows_replays_sequential_release_row(seed):
+    rng = np.random.Generator(np.random.Philox(seed))
+    nm = _toy_map(caps=(64, 48))
+    placed = _occupy(nm, rng, 10)
+    if not placed:
+        return
+    take = [r for r in placed if rng.random() < 0.7] or placed[:1]
+    a, b = nm.overlay(), nm.overlay()
+    for r in take:
+        a.release_row(r)
+    b.release_rows(np.asarray(take, np.int64))
+    assert a.released == b.released
+    assert all(isinstance(r, int) for r in b.released)
+    assert (a.free == b.free).all()
+    assert (a.cfree == b.cfree).all()
+    for k in range(nm.n_clusters):
+        assert a._stats(k) == b._stats(k)
+
+
+def test_fit_any_scattered_order_is_stable():
+    """Equal-sized holes fill lowest node index first: the tie-break is
+    an explicit stable sort, pinned here because the committed decision
+    digests depend on it."""
+    nm = _toy_map(caps=(32,), gpn=8)
+    nm.assign(0, [0, 1, 2, 3], [3, 3, 3, 3])  # four equal 5-GPU holes
+    ov = nm.overlay()
+    assert not ov.feasible(0, 12)  # no empty node: scattered path
+    ov.fit_any(9, 0, 12)
+    row, nodes, gpus = ov.assigns[0]
+    assert (row, nodes, gpus) == (9, [0, 1, 2], [5, 5, 2])
+
+
+# ----------------------------------------------- degenerate gang helpers
+@settings(max_examples=150, deadline=None)
+@given(
+    demand=st.integers(0, 64),
+    min_gpus=st.integers(0, 160),
+    gpn=st.integers(1, 16),
+)
+def test_degenerate_gang_helpers_clamp(demand, min_gpus, gpn):
+    d = max(1, demand)
+    lo = max(1, min_gpus)
+    fg = floor_gang(demand, min_gpus)
+    mp = min_piece(demand, min_gpus, gpn)
+    if lo > d:
+        # no admissible world size: never a gang beyond demand, and no
+        # sub-node hole is ever usable by this shape
+        assert fg == 0
+        assert mp == gpn
+        return
+    # brute force over the compatible ladder
+    compat = sorted(v for v in gang_values(d, lo, 2 * d) if v >= lo)
+    divs_ge = [v for v in splice_divisors(d) if v >= lo]
+    assert fg == (divs_ge[0] if divs_ge else 0)
+    assert fg <= d
+    pieces = [g if g < gpn else (g % gpn or gpn) for g in compat]
+    assert mp == min([gpn] + pieces)
+
+
+# ------------------------------- undo x compaction x release_row survival
+def test_undo_tombstones_survive_pool_compaction():
+    """A mid-decide plan full of releases and undone fits commits through
+    release_many/assign_many while the span pool compacts underneath:
+    released rows must stay dead, undone fits must never materialize."""
+    nm = _toy_map(caps=(64,), gpn=8, rows=2)  # tiny pool: compaction soon
+    for row in range(6):
+        nm.auto_fit(row, 0, 8)
+    # churn to build garbage so the commit's _pool_reserve compacts
+    for _ in range(6):
+        for row in range(6):
+            nm.release(row)
+        for row in range(6):
+            nm.auto_fit(row, 0, 8)
+    ov = nm.overlay()
+    ov.release_row(0)
+    ov.release_row(2)
+    ov.fit_any(0, 0, 8)  # refit row 0 ...
+    ov.fit_any(10, 0, 8)
+    ov.undo(0)  # ... then change our mind: row 0 stays released
+    ov.fit_any(11, 0, 4)
+    assert ov.assigns[0] is None
+    assigns = [a for a in ov.assigns if a is not None]
+    nm.release_many(np.asarray(ov.released, np.int64))
+    nm.assign_many(assigns)
+    nm.check()
+    assert not nm.has_span(0)  # the undone fit did not resurrect row 0
+    assert not nm.has_span(2)
+    assert nm.span_total(10) == 8
+    assert nm.span_total(11) == 4
+    # force compaction explicitly; survivors must be byte-identical
+    before = {r: tuple(map(tuple, nm.row_pieces(r))) for r in (1, 3, 4, 5, 10, 11)}
+    nm._compact()
+    nm.check()
+    assert not nm.has_span(0) and not nm.has_span(2)
+    for r, pieces in before.items():
+        assert tuple(map(tuple, nm.row_pieces(r))) == pieces
+
+
+def test_release_many_assign_many_match_sequential():
+    rng = np.random.Generator(np.random.Philox(7))
+    seq = _toy_map(caps=(64, 48), rows=4)
+    bat = _toy_map(caps=(64, 48), rows=4)
+    for nmx in (seq, bat):
+        r = np.random.Generator(np.random.Philox(3))
+        _occupy(nmx, r, 8)
+    live = sorted(int(r) for r in seq.live_rows())
+    rel = [r for r in live if rng.random() < 0.5]
+    for r in rel:
+        seq.release(r)
+    bat.release_many(np.asarray(rel, np.int64))
+    # build the plan against the (identical) post-release free state
+    plan = []
+    for t, node in enumerate(np.flatnonzero(seq.node_free > 0)[:5]):
+        plan.append((50 + t, [int(node)], [1]))
+    for r, nodes, gpus in plan:
+        seq.assign(r, nodes, gpus)
+    bat.assign_many(plan)
+    seq.check()
+    bat.check()
+    assert (seq.node_free == bat.node_free).all()
+    assert (seq.node_used == bat.node_used).all()
+    for r in list(live) + [p[0] for p in plan]:
+        a = tuple(map(tuple, seq.row_pieces(r)))
+        b = tuple(map(tuple, bat.row_pieces(r)))
+        assert a == b

@@ -21,6 +21,7 @@ Five contracts from docs/serving.md:
 import hashlib
 
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.scheduler.costs import CostModel
@@ -176,6 +177,34 @@ def test_traffic_trace_deterministic_and_bounded():
         assert a.qps[i].min() >= tcfg.trough_fraction * spec.peak_qps - 1e-9
         assert a.qps[i].max() <= spec.peak_qps * tcfg.spike_amplitude[1] + 1e-9
     assert np.all(a.window_peak(0.0, 3600.0) <= a.peak() + 1e-9)
+
+
+def test_traffic_trace_rejects_queries_past_horizon():
+    """A simulation horizon longer than the trace must surface as an
+    error, not silently replay the final sample as flat qps forever."""
+    tcfg = TrafficConfig(seed=TRAFFIC_SEED)
+    trace = TrafficTrace(SERVICES, tcfg, 3600.0)
+    end = trace.end_seconds
+    assert end >= 3600.0  # the trace covers the horizon it was built for
+    trace.at(end)  # the boundary itself is in range
+    # the final in-simulation window may overhang the end by part of a
+    # tick: t1 clamps to the samples that exist (documented behavior)
+    short = trace.window_peak(end - 30.0, end + 600.0)
+    assert short.shape == (len(SERVICES),)
+    with pytest.raises(ValueError):
+        trace.at(end + 1.0)
+    with pytest.raises(ValueError):
+        trace.window_peak(end + 1.0, end + 600.0)
+    # driving a 2h simulation off a 1h trace trips the guard instead of
+    # flat-lining: the first tick past the trace end raises
+    for now in np.arange(0.0, 2 * 3600.0, 300.0):
+        if now > end:
+            with pytest.raises(ValueError):
+                trace.at(float(now))
+            break
+        trace.at(float(now))
+    else:  # pragma: no cover - the trace would have to cover 2h
+        raise AssertionError("guard never engaged")
 
 
 def test_holt_forecaster_leads_a_ramp():
