@@ -57,6 +57,16 @@ carries a span plan), so the decision digest, the decide-time budget
 and the reported ``fragmentation_stranded_gpus`` /
 ``defrag_migrations`` fields all gate the node path.
 
+With ``--check-equivalence`` (or ``--trace-out`` / ``--events-out``)
+the trace is also replayed once with the full observability stack on
+(``scheduler/telemetry.py``: structured event log, per-tick metrics,
+decide-pass profiler), gating that telemetry (a) changes no decision
+(identical digest + result signature), (b) costs at most
+``TELEMETRY_OVERHEAD_FACTOR`` on the decide path, and (c) produces an
+event log whose replay reproduces the run's mechanism aggregates
+exactly.  ``--trace-out`` exports a Perfetto/chrome://tracing JSON of
+that run; ``--events-out`` dumps the raw JSONL event log.
+
 ``--failure-trace storm`` adds a reliability row: a long-job variant of
 the trace (``RELIABILITY_WORK_FACTOR`` x the work per job — node-accurate
 blast radii mean short jobs rarely die mid-run, and periodic
@@ -93,6 +103,11 @@ from repro.scheduler.simulator import (
     SimConfig,
     make_fleet,
     synth_workload,
+)
+from repro.scheduler.telemetry import (
+    FleetTelemetry,
+    check_replay,
+    export_chrome_trace,
 )
 
 SEED = 5
@@ -160,6 +175,14 @@ class _TimedPolicy:
 
     def bind_costs(self, cost_model, interval_hint) -> None:
         self.inner.bind_costs(cost_model, interval_hint)
+
+    def bind_telemetry(self, telemetry) -> None:
+        """Forward the simulator's telemetry bundle to the wrapped
+        policy so its decide-pass spans land in the exported trace;
+        this wrapper's own ``decide_seconds`` stays an independent
+        outside-in measurement (it excludes digest hashing)."""
+        if hasattr(self.inner, "bind_telemetry"):
+            self.inner.bind_telemetry(telemetry)
 
     def decide(self, now, jobs, fleet):
         t0 = time.perf_counter()
@@ -374,6 +397,13 @@ def bench_failures(
 # before the gate trips: CI hosts vary run to run, and the gate should
 # catch a reintroduced per-job gather (a multi-x regression), not noise
 DECIDE_BUDGET_FACTOR = 2.0
+
+# telemetry must be near-free on the decide path: the telemetry-on
+# re-run's decide time may exceed the telemetry-off run's by at most
+# this factor (plus an absolute slack floor — at bench-smoke scale the
+# whole decide path is sub-second and host noise dwarfs any ratio)
+TELEMETRY_OVERHEAD_FACTOR = 1.05
+TELEMETRY_OVERHEAD_SLACK_SECONDS = 0.5
 
 # -- serving row ----------------------------------------------------------
 # the mixed-workload acceptance bar: fraction of per-service scheduler
@@ -618,6 +648,8 @@ def bench(
     failure_spec: Optional[str] = None,
     job_table: bool = True,
     serving: bool = False,
+    trace_out: Optional[str] = None,
+    events_out: Optional[str] = None,
 ) -> Dict:
     # the committed BENCH_sched.json (if the target already exists) is
     # the decide-time budget the new run is gated against; the node-pass
@@ -662,6 +694,9 @@ def bench(
         "equivalence": "skipped",
         "decide_gate": "skipped",
         "node_gate": "skipped",
+        "telemetry_gate": "skipped",
+        "telemetry_replay": "skipped",
+        "telemetry_equivalence": "skipped",
         **_result_signature(res),
     }
     msg = (
@@ -677,6 +712,7 @@ def bench(
         f"migr={res.migrations} ({res.migrations_cross_region} cross)"
     )
     print(msg)
+    print(res.summary())
 
     if check_equivalence:
         # every representation x policy-path combination must reproduce
@@ -769,6 +805,92 @@ def bench(
                 f"{DECIDE_BUDGET_FACTOR:.1f}x of the committed "
                 f"{node_budget:.2f}s baseline"
             )
+
+    if check_equivalence or trace_out or events_out:
+        # telemetry pass: replay the main trace with the full
+        # observability stack on (event log + metrics + profiler) and
+        # gate three properties — (a) telemetry changes NOTHING: the
+        # decision digest and result signature match the telemetry-off
+        # run byte for byte; (b) telemetry is near-free on the decide
+        # path (TELEMETRY_OVERHEAD_FACTOR); (c) the event log is
+        # complete: replaying it reproduces the run's mechanism and
+        # reliability aggregates exactly (telemetry.check_replay).
+        # Exports the Perfetto trace / JSONL event log on request.
+        fleet_t = _fleet(regions, clusters_per_region, gpus_per_cluster)
+        tele = FleetTelemetry()
+        tpolicy = _TimedPolicy(ElasticPolicy(), digest=check_equivalence)
+        res_t = FleetSimulator(
+            fleet_t,
+            _trace(n_jobs, fleet_t.total()),
+            tpolicy,
+            SimConfig(
+                horizon_seconds=horizon,
+                sla_ledger=sla_ledger,
+                job_table=job_table,
+                telemetry=tele,
+            ),
+        ).run()
+        out["telemetry_decide_seconds"] = tpolicy.decide_seconds
+        ratio = tpolicy.decide_seconds / max(policy.decide_seconds, 1e-9)
+        out["telemetry_overhead_ratio"] = ratio
+        allowed = max(
+            policy.decide_seconds * TELEMETRY_OVERHEAD_FACTOR,
+            policy.decide_seconds + TELEMETRY_OVERHEAD_SLACK_SECONDS,
+        )
+        out["telemetry_gate"] = (
+            "ok" if tpolicy.decide_seconds <= allowed else "FAILED"
+        )
+        mismatches = check_replay(tele.events, res_t, reliability=False)
+        out["telemetry_replay"] = "ok" if not mismatches else "FAILED"
+        if check_equivalence:
+            same = tpolicy.digest() == policy.digest() and _result_signature(
+                res_t
+            ) == _result_signature(res)
+            out["telemetry_equivalence"] = "ok" if same else "FAILED"
+        print(
+            f"telemetry: decide {tpolicy.decide_seconds:.2f}s "
+            f"({ratio:.2f}x of off), {len(tele.events)} events, "
+            f"{len(tele.metrics)} metric ticks — "
+            f"overhead {out['telemetry_gate']}, "
+            f"replay {out['telemetry_replay']}, "
+            f"digest {out['telemetry_equivalence']}"
+        )
+        if mismatches:
+            print(
+                "TELEMETRY REPLAY FAILURE (event log does not reproduce "
+                "the run's aggregates):\n  " + "\n  ".join(mismatches),
+                file=sys.stderr,
+            )
+        if out["telemetry_gate"] == "FAILED":
+            print(
+                f"TELEMETRY OVERHEAD REGRESSION: decide "
+                f"{tpolicy.decide_seconds:.2f}s > allowed {allowed:.2f}s "
+                f"({TELEMETRY_OVERHEAD_FACTOR:.2f}x the telemetry-off "
+                f"{policy.decide_seconds:.2f}s)",
+                file=sys.stderr,
+            )
+        if out["telemetry_equivalence"] == "FAILED":
+            print(
+                f"TELEMETRY EQUIVALENCE FAILURE: telemetry-on run "
+                f"diverged from telemetry-off:\n"
+                f"  off: digest={policy.digest()} {_result_signature(res)}\n"
+                f"  on:  digest={tpolicy.digest()} "
+                f"{_result_signature(res_t)}",
+                file=sys.stderr,
+            )
+        if trace_out:
+            n_spans = export_chrome_trace(
+                trace_out,
+                events=tele.events,
+                profiler=tele.prof,
+                cluster_names=[c.id for c in fleet_t.clusters()],
+                job_ids=tele.meta.get("job_ids"),
+                end_time=horizon,
+            )
+            print(f"wrote {trace_out} ({n_spans} trace events)")
+        if events_out:
+            tele.events.to_jsonl(events_out, meta=tele.meta)
+            print(f"wrote {events_out} ({len(tele.events)} event rows)")
 
     if serving:
         out["serving"] = bench_serving(
@@ -998,6 +1120,24 @@ def main(argv: Optional[List[str]] = None) -> int:
         "and the loaning training-throughput gain (docs/serving.md)",
     )
     parser.add_argument(
+        "--trace-out",
+        type=str,
+        default=None,
+        metavar="PATH",
+        help="export a Perfetto/chrome://tracing JSON trace of the "
+        "telemetry re-run: job lifecycle spans on per-cluster tracks "
+        "plus decide-pass profiler phases (docs/observability.md)",
+    )
+    parser.add_argument(
+        "--events-out",
+        type=str,
+        default=None,
+        metavar="PATH",
+        help="export the telemetry re-run's structured event log as "
+        "JSONL (one lifecycle event per line; replayable via "
+        "telemetry.read_jsonl/replay_events)",
+    )
+    parser.add_argument(
         "--harness",
         action="store_true",
         help="print the benchmark-harness CSV rows instead",
@@ -1019,11 +1159,16 @@ def main(argv: Optional[List[str]] = None) -> int:
         failure_spec=args.failure_trace,
         job_table=not args.no_job_table,
         serving=args.serving,
+        trace_out=args.trace_out,
+        events_out=args.events_out,
     )
     if (
         out["equivalence"] == "FAILED"
         or out["decide_gate"] == "FAILED"
         or out["node_gate"] == "FAILED"
+        or out["telemetry_gate"] == "FAILED"
+        or out["telemetry_replay"] == "FAILED"
+        or out["telemetry_equivalence"] == "FAILED"
     ):
         return 1
     srv = out.get("serving")

@@ -54,3 +54,23 @@ def run() -> List[Dict]:
                          SimConfig(horizon_seconds=36 * 3600,
                                    migration_cost_seconds=0.0)))
     return rows
+
+
+def main() -> int:
+    """CLI entry: run the first-seed elastic vs static comparison and
+    print each run's one-screen ``SimResult.summary()`` report."""
+    for pol in (StaticGangPolicy(), ElasticPolicy()):
+        sim = FleetSimulator(
+            make_fleet(),
+            synth_workload(120, 2048, seed=SEEDS[0]),
+            pol,
+            SimConfig(horizon_seconds=36 * 3600),
+        )
+        res = sim.run()
+        print(f"== {pol.name} ==")
+        print(res.summary())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -36,9 +36,22 @@ from repro.core.elastic import ElasticRuntime
 from repro.core.migration import checkpoint_job
 from repro.core.sla import FleetSLAAccounts, FleetSlotAccount
 from repro.scheduler.costs import CostModel
-from repro.scheduler.job_table import JobTable, TableJob
+from repro.scheduler.job_table import TIER_CODE, JobTable, TableJob
 from repro.scheduler.node_map import NodeMap
 from repro.scheduler.policy import ElasticPolicy
+from repro.scheduler.telemetry import (
+    C_FAILURE,
+    C_NONE,
+    C_POLICY,
+    C_PREEMPT,
+    E_ADMIT,
+    E_COMPLETE,
+    E_FAILURE,
+    E_PREEMPT,
+    E_RESIZE,
+    E_RESTORE,
+    FleetTelemetry,
+)
 from repro.scheduler.types import Cluster, Fleet, Job, Region
 
 
@@ -78,11 +91,21 @@ class FleetExecutor:
         policy: Optional[ElasticPolicy] = None,
         tick_seconds: float = 60.0,
         cost_model: Optional[CostModel] = None,
+        telemetry: Optional[FleetTelemetry] = None,
     ):
         self.total_slots = total_slots
         self.jobs: Dict[str, ManagedJob] = {}
         self.store = CheckpointStore()
         self.log: List[Dict] = []
+        # observability: the same structured event log / profiler bundle
+        # the simulator threads (telemetry.py) — pass ``True`` to build a
+        # fresh one.  ``self.log``'s human-readable dicts stay; the
+        # structured rows add machine-checkable lifecycle events on the
+        # REAL-mechanism back-end too.
+        if telemetry is True:
+            telemetry = FleetTelemetry()
+        self.tele: Optional[FleetTelemetry] = telemetry or None
+        self._ev = self.tele.events if self.tele is not None else None
         # the same policy object the simulator drives, over a 1-cluster fleet
         self.policy = policy or ElasticPolicy()
         # thread the mechanism cost model into the policy so the executor's
@@ -90,6 +113,8 @@ class FleetExecutor:
         self.cost_model = cost_model or CostModel()
         if hasattr(self.policy, "bind_costs"):
             self.policy.bind_costs(self.cost_model, tick_seconds)
+        if self.tele is not None and hasattr(self.policy, "bind_telemetry"):
+            self.policy.bind_telemetry(self.tele)
         # shadow accounts live in a shared fleet ledger, and the shadows
         # themselves in a shared JobTable, like the simulator's — one
         # decide path for both back-ends, column slices included
@@ -137,6 +162,33 @@ class FleetExecutor:
         shadow.node_slot = self.table.adopt(shadow)  # NodeMap row == slot
         self._shadows[job.id] = shadow
 
+    def _emit(
+        self,
+        kind: int,
+        jid: str,
+        cause: int = C_NONE,
+        gpus: int = 0,
+        seconds: float = 0.0,
+    ) -> None:
+        """One structured telemetry row for this managed job (no-op when
+        no telemetry is attached).  Jobs are keyed by their stable table
+        slot; the one-cluster fleet is cluster index 0.  ``seconds`` is
+        the mechanism's modelled cost — the executor measures steps, not
+        wall downtime, so FAILURE rows carry lost *steps* instead."""
+        if self._ev is None:
+            return
+        s = self._shadows[jid]
+        self._ev.append(
+            self.clock,
+            kind,
+            job=s.node_slot,
+            cluster=0,
+            tier=TIER_CODE[s.tier],
+            cause=cause,
+            gpus=gpus,
+            seconds=seconds,
+        )
+
     # ------------------------------------------------------------ policy
     def _decide_allocations(self) -> Dict[str, int]:
         """Run the unified ``ElasticPolicy`` over the one-cluster fleet and
@@ -172,11 +224,17 @@ class FleetExecutor:
                 # exactly like the simulator would; it also re-enters the
                 # queue now, which is when fairness aging starts accruing
                 shadow = self._shadows[jid]
-                shadow.restore_debt += self.cost_model.preempt_seconds(
-                    shadow.checkpoint_bytes
-                )
+                debt = self.cost_model.preempt_seconds(shadow.checkpoint_bytes)
+                shadow.restore_debt += debt
                 shadow.queued_since = self.clock
                 self.log.append({"event": "preempt", "job": jid})
+                self._emit(
+                    E_PREEMPT,
+                    jid,
+                    cause=C_POLICY,
+                    gpus=job.allocated,
+                    seconds=debt,
+                )
             elif target > 0 and job.allocated == 0 and job.runtime is None:
                 if jid not in self.store.manifests:
                     # failed before any checkpoint existed: fresh restart
@@ -184,15 +242,23 @@ class FleetExecutor:
                         job._cfg, job._tcfg, job.world_size, target, job._gb, job._sl
                     )
                     job.steps_done = 0
-                    self._shadows[jid].failed_at = None
-                    self.log.append({"event": "restart", "job": jid, "at_step": 0})
-                    job.allocated = target
                     shadow = self._shadows[jid]
+                    failed = shadow.failed_at is not None
+                    shadow.failed_at = None
+                    self.log.append({"event": "restart", "job": jid, "at_step": 0})
+                    self._emit(
+                        E_ADMIT,
+                        jid,
+                        cause=C_FAILURE if failed else C_NONE,
+                        gpus=target,
+                    )
+                    job.allocated = target
                     shadow.allocated = target
                     shadow.ever_ran = True
                     shadow.cluster = "local"
                     continue
                 # REAL re-admission: restore from the deduped store
+                failed = self._shadows[jid].failed_at is not None
                 self._shadows[jid].restore_debt = 0.0
                 self._shadows[jid].failed_at = None
                 device, host, step = self.store.restore(jid)
@@ -210,12 +276,32 @@ class FleetExecutor:
                 )
                 assert int(job.runtime.state["step"]) == job.steps_done
                 self.log.append({"event": "restore", "job": jid, "at_step": step})
+                self._emit(
+                    E_RESTORE,
+                    jid,
+                    cause=C_FAILURE if failed else C_PREEMPT,
+                    gpus=target,
+                    seconds=self.cost_model.restore_seconds(
+                        self._shadows[jid].checkpoint_bytes
+                    ),
+                )
             elif target > 0 and job.runtime is not None:
                 if job.runtime.physical != target:
                     job.runtime.resize(target)  # REAL transparent resize
                     if job.allocated > 0:  # admission is not a resize
                         job.resizes += 1
                         self.log.append({"event": "resize", "job": jid, "to": target})
+                        self._emit(
+                            E_RESIZE,
+                            jid,
+                            cause=C_POLICY,
+                            gpus=target,
+                            seconds=self.cost_model.resize_seconds(
+                                self._shadows[jid].checkpoint_bytes
+                            ),
+                        )
+                if job.allocated == 0:
+                    self._emit(E_ADMIT, jid, gpus=target)
             job.allocated = target
             shadow = self._shadows[jid]
             shadow.allocated = target
@@ -258,6 +344,7 @@ class FleetExecutor:
         else:
             snap_step = 0  # never checkpointed: restart from scratch
         job.runtime = None  # the hardware is gone — no quiesce, no dump
+        lost_alloc = job.allocated
         job.allocated = 0
         job.steps_done = snap_step
         shadow = self._shadows[jid]
@@ -275,6 +362,13 @@ class FleetExecutor:
             "lost_steps": step_now - snap_step,
         }
         self.log.append(event)
+        self._emit(
+            E_FAILURE,
+            jid,
+            cause=C_FAILURE,
+            gpus=lost_alloc,
+            seconds=float(step_now - snap_step),  # lost STEPS (see _emit)
+        )
         return event
 
     # ------------------------------------------------------------ run
@@ -301,6 +395,7 @@ class FleetExecutor:
             job.steps_done = int(job.runtime.state["step"])
             if job.steps_done >= job.total_steps:
                 job.done = True
+                self._emit(E_COMPLETE, job.id, gpus=job.allocated)
                 job.allocated = 0
                 job.runtime = None
                 shadow = self._shadows[job.id]

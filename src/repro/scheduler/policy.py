@@ -76,7 +76,6 @@ that motivates the paper (§1: utilization/idling).
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections.abc import Mapping as MappingABC
 from typing import Dict, List, Mapping, Optional, Tuple, Union
 
@@ -92,6 +91,7 @@ from repro.scheduler.node_map import (
     gang_values,
     splice_divisors,
 )
+from repro.scheduler.telemetry import Profiler
 from repro.scheduler.types import Fleet, Job
 
 DEFAULT_INTERVAL_SECONDS = 300.0
@@ -332,13 +332,37 @@ class ElasticPolicy:
         self.aging_threshold_intervals = aging_threshold_intervals
         self._bound_cost = False
         self._bound_interval = False
-        # wall seconds spent gathering per-job state into arrays inside
-        # _decide_vectorized (the base-array build, or the JobTable
-        # column slicing that replaces it); benchmarks report the split
-        self.gather_seconds = 0.0
-        # wall seconds spent inside the node-granular placement pass
-        # (a subset of decide time); benchmarks gate it separately
-        self.node_seconds = 0.0
+        # unified decide-pass profiler (telemetry.Profiler).  Totals
+        # always accumulate at the exact cost of the old ad-hoc
+        # ``gather_seconds``/``node_seconds`` fields (two perf_counter
+        # calls per span); per-span records for trace export are kept
+        # only once a FleetTelemetry is bound via ``bind_telemetry``.
+        self.prof = Profiler()
+
+    @property
+    def decide_seconds(self) -> float:
+        """Wall seconds spent inside ``decide`` since construction."""
+        return self.prof.total("decide")
+
+    @property
+    def gather_seconds(self) -> float:
+        """Share of decide time spent gathering per-job state into
+        arrays inside ``_decide_vectorized`` (the base-array build, or
+        the JobTable column slicing that replaces it); benchmarks
+        report the split."""
+        return self.prof.total("gather")
+
+    @property
+    def node_seconds(self) -> float:
+        """Share of decide time spent inside the node-granular
+        placement pass; benchmarks gate it separately."""
+        return self.prof.total("place")
+
+    def bind_telemetry(self, telemetry) -> None:
+        """Adopt a ``FleetTelemetry``'s profiler so this policy's spans
+        land in the shared trace (called by the simulator when
+        ``SimConfig.telemetry`` is set)."""
+        self.prof = telemetry.prof
 
     def bind_costs(self, cost_model: CostModel, interval_hint: float) -> None:
         """Thread the driver's charged cost model and tick length into
@@ -401,6 +425,10 @@ class ElasticPolicy:
         return 0.0
 
     def decide(self, now: float, jobs: List[Job], fleet: Fleet) -> Decision:
+        with self.prof.span("decide"):
+            return self._decide(now, jobs, fleet)
+
+    def _decide(self, now: float, jobs: List[Job], fleet: Fleet) -> Decision:
         if isinstance(jobs, JobView):
             # table-backed fast path: the active filter is a masked
             # column read, no per-job Python at all
@@ -434,48 +462,47 @@ class ElasticPolicy:
         # (exact — GPU counts and byte sizes are far below 2**53), tier
         # attributes via code lookup tables.  Mixed or foreign-table
         # lists fall back to the object path, like _shared_ledger.
-        t_gather = time.perf_counter()
-        table, slots = shared_table(active)
-        if table is not None:
-            demand = table.demand_gpus[slots]
-            min_g = table.min_gpus[slots]
-            alloc0 = table.allocated[slots]
-            arrival = table.arrival[slots]
-            tcode = table.tier_code[slots]
-            qsince = table.queued_since[slots]
-            cb = table.checkpoint_bytes[slots].astype(np.float64)
-            debt = table.restore_debt[slots]
-            ran = table.ever_ran[slots]
-            svc = table.service[slots]
-        else:
-            base = np.array(
-                [
-                    (
-                        j.demand_gpus,
-                        j.min_gpus,
-                        j.allocated,
-                        j.arrival,
-                        j.checkpoint_bytes,
-                        j.restore_debt,
-                        _TIER_CODE[j.tier],
-                        j.queued_since,
-                        j.service,
-                    )
-                    for j in active
-                ],
-                dtype=np.float64,
-            ).reshape(n, 9)
-            demand = base[:, 0].astype(np.int64)
-            min_g = base[:, 1].astype(np.int64)
-            alloc0 = base[:, 2].astype(np.int64)
-            arrival = base[:, 3]
-            tcode = base[:, 6].astype(np.int64)
-            qsince = base[:, 7]
-            cb = base[:, 4]
-            debt = base[:, 5]
-            svc = base[:, 8] > 0.5
-            ran = None  # gathered lazily, only when a cost model needs it
-        self.gather_seconds += time.perf_counter() - t_gather
+        with self.prof.span("gather"):
+            table, slots = shared_table(active)
+            if table is not None:
+                demand = table.demand_gpus[slots]
+                min_g = table.min_gpus[slots]
+                alloc0 = table.allocated[slots]
+                arrival = table.arrival[slots]
+                tcode = table.tier_code[slots]
+                qsince = table.queued_since[slots]
+                cb = table.checkpoint_bytes[slots].astype(np.float64)
+                debt = table.restore_debt[slots]
+                ran = table.ever_ran[slots]
+                svc = table.service[slots]
+            else:
+                base = np.array(
+                    [
+                        (
+                            j.demand_gpus,
+                            j.min_gpus,
+                            j.allocated,
+                            j.arrival,
+                            j.checkpoint_bytes,
+                            j.restore_debt,
+                            _TIER_CODE[j.tier],
+                            j.queued_since,
+                            j.service,
+                        )
+                        for j in active
+                    ],
+                    dtype=np.float64,
+                ).reshape(n, 9)
+                demand = base[:, 0].astype(np.int64)
+                min_g = base[:, 1].astype(np.int64)
+                alloc0 = base[:, 2].astype(np.int64)
+                arrival = base[:, 3]
+                tcode = base[:, 6].astype(np.int64)
+                qsince = base[:, 7]
+                cb = base[:, 4]
+                debt = base[:, 5]
+                svc = base[:, 8] > 0.5
+                ran = None  # gathered lazily, when a cost model needs it
         prio = _TIER_PRIO[tcode]
         sup = _TIER_SUP[tcode]
         gfrac = _TIER_GFRAC[tcode]
@@ -487,29 +514,32 @@ class ElasticPolicy:
         # table-adopted accounts mirror their ledger slots into the
         # sla_slot column, so not even the account objects are touched);
         # hand-built jobs with scalar accounts fall back to the oracle loop
-        head = np.full(n, np.inf)
-        gidx = np.flatnonzero(guar)
-        if gidx.size:
-            if (
-                table is not None
-                and table.sla is not None
-                and bool(table.sla_view[slots[gidx]].all())
-            ):
-                head[gidx] = table.sla.headroom_all(
-                    now, table.sla_slot[slots[gidx]], gfrac[gidx]
-                )
-            else:
-                gaccs = [active[i].account for i in gidx]
-                ledger, lslots = _shared_ledger(gaccs)
-                if ledger is not None:
-                    head[gidx] = ledger.headroom_all(now, lslots, gfrac[gidx])
+        with self.prof.span("sla"):
+            head = np.full(n, np.inf)
+            gidx = np.flatnonzero(guar)
+            if gidx.size:
+                if (
+                    table is not None
+                    and table.sla is not None
+                    and bool(table.sla_view[slots[gidx]].all())
+                ):
+                    head[gidx] = table.sla.headroom_all(
+                        now, table.sla_slot[slots[gidx]], gfrac[gidx]
+                    )
                 else:
-                    for k, i in enumerate(gidx):
-                        head[i] = gaccs[k].headroom(now)
-        shrunk = np.maximum(
-            min_g, (demand * np.minimum(1.0, gfrac + 0.1)).astype(np.int64)
-        )
-        need = np.where(guar, np.where(head > 0.1, shrunk, demand), 0)
+                    gaccs = [active[i].account for i in gidx]
+                    ledger, lslots = _shared_ledger(gaccs)
+                    if ledger is not None:
+                        head[gidx] = ledger.headroom_all(
+                            now, lslots, gfrac[gidx]
+                        )
+                    else:
+                        for k, i in enumerate(gidx):
+                            head[i] = gaccs[k].headroom(now)
+            shrunk = np.maximum(
+                min_g, (demand * np.minimum(1.0, gfrac + 0.1)).astype(np.int64)
+            )
+            need = np.where(guar, np.where(head > 0.1, shrunk, demand), 0)
 
         if cm is None:
             vcost = np.zeros(n)
@@ -535,28 +565,30 @@ class ElasticPolicy:
             )
 
         idx = np.arange(n)
-        # fairness aging: a guaranteed job queued past the threshold joins
-        # the running-job class, scored by its accrued bonus against the
-        # running peers' preempt+restore downtime; rates are per tier
-        wait = now - qsince
-        threshold = self.aging_threshold_intervals * interval
-        rate = self._aging_vec[tcode]
-        aged = (~running) & guar & (wait > threshold) & (rate > 0.0)
-        score = np.where(
-            running,
-            vcost,
-            np.where(aged, rate * (wait - threshold), 0.0),
-        )
-        waiting = (~(running | aged)).astype(np.int64)
-        # admission order: tier first, serving replica groups ahead of
-        # training within their tier (a reclaim retarget must never wait
-        # on training admission); then the running jobs and aged
-        # long-queued jobs come ahead of the plain queue, ranked by how
-        # expensive they are to stop (or how starved they are), then FIFO
-        # (lexsort: last key is primary)
-        order_a = np.lexsort(
-            (idx, arrival, -score, waiting, -svc.astype(np.int64), -prio)
-        )
+        with self.prof.span("sort"):
+            # fairness aging: a guaranteed job queued past the threshold
+            # joins the running-job class, scored by its accrued bonus
+            # against the running peers' preempt+restore downtime; rates
+            # are per tier
+            wait = now - qsince
+            threshold = self.aging_threshold_intervals * interval
+            rate = self._aging_vec[tcode]
+            aged = (~running) & guar & (wait > threshold) & (rate > 0.0)
+            score = np.where(
+                running,
+                vcost,
+                np.where(aged, rate * (wait - threshold), 0.0),
+            )
+            waiting = (~(running | aged)).astype(np.int64)
+            # admission order: tier first, serving replica groups ahead
+            # of training within their tier (a reclaim retarget must
+            # never wait on training admission); then the running jobs
+            # and aged long-queued jobs come ahead of the plain queue,
+            # ranked by how expensive they are to stop (or how starved
+            # they are), then FIFO (lexsort: last key is primary)
+            order_a = np.lexsort(
+                (idx, arrival, -score, waiting, -svc.astype(np.int64), -prio)
+            )
         # failed-out domains await repair: only healthy capacity is real
         total = fleet.capacity()
         galloc = np.zeros(n, dtype=np.int64)
@@ -825,9 +857,9 @@ class ElasticPolicy:
         """Node placement entry for both decide paths: dispatch to the
         batched core (production) or the per-job loop it is
         digest-checked against (``node_batch=False``), accumulating the
-        node-pass share of decide time in ``node_seconds``."""
-        t0 = time.perf_counter()
-        try:
+        node-pass share of decide time in the profiler's ``place`` span
+        (surfaced as ``node_seconds``)."""
+        with self.prof.span("place"):
             core = (
                 self._place_nodes_batched
                 if self.node_batch
@@ -849,8 +881,6 @@ class ElasticPolicy:
                 creg,
                 drain,
             )
-        finally:
-            self.node_seconds += time.perf_counter() - t0
 
     def _place_nodes_loop(
         self,
@@ -1127,159 +1157,166 @@ class ElasticPolicy:
         fresh: dict = {}  # job index -> its entry in ov.assigns
         # phase A: per-cluster cumsum greedy over the changed jobs that
         # may stay put, then one fit_batch replay in changed order
-        staying = np.zeros(n, dtype=bool)
-        elig = changed[(jcl[changed] >= 0) & ~no_stay[changed]]
-        if elig.size:
-            for k in np.unique(jcl[elig]):
-                sel = elig[jcl[elig] == k]
-                g, _ = _greedy_take(
-                    galloc[sel], galloc[sel], int(ov.cfree[k]), partial=False
-                )
-                staying[sel[g > 0]] = True
-            st = changed[staying[changed]]
-            if st.size:
-                placed[st] = jcl[st]
-                base = len(ov.assigns)
-                ov.fit_batch(rows[st], jcl[st], galloc[st])
-                for t, i in enumerate(st):
-                    fresh[int(i)] = base + t
+        with self.prof.span("phase_a"):
+            staying = np.zeros(n, dtype=bool)
+            elig = changed[(jcl[changed] >= 0) & ~no_stay[changed]]
+            if elig.size:
+                for k in np.unique(jcl[elig]):
+                    sel = elig[jcl[elig] == k]
+                    g, _ = _greedy_take(
+                        galloc[sel], galloc[sel], int(ov.cfree[k]), partial=False
+                    )
+                    staying[sel[g > 0]] = True
+                st = changed[staying[changed]]
+                if st.size:
+                    placed[st] = jcl[st]
+                    base = len(ov.assigns)
+                    ov.fit_batch(rows[st], jcl[st], galloc[st])
+                    for t, i in enumerate(st):
+                        fresh[int(i)] = base + t
         # phase B: residual pool picks — the oracle loop's pool filters,
         # but each pick is the overlay's heap-walk pick_cluster instead
         # of K-wide vector math, and the per-job columns are
         # pre-gathered to python lists so the loop never touches numpy
         # scalars
-        drain_l = drain.tolist() if any_drain else None
-        all_drain = bool(drain.all()) if any_drain else False
-        creg_l = creg.tolist()
-        ch_l = changed.tolist()
-        stay_l = staying[changed].tolist()
-        g_l = galloc[changed].tolist()
-        run_l = running[changed].tolist()
-        jreg_l = jreg[changed].tolist()
-        rows_l = rows[changed].tolist()
-        jcl_l = jcl[changed].tolist()
-        hasc_l = has_cluster[changed].tolist()
-        for t, i in enumerate(ch_l):
-            if stay_l[t]:
-                continue
-            g = g_l[t]
-            want = jreg_l[t] if run_l[t] and jreg_l[t] >= 0 else -1
-            k = ov.pick_cluster(g, drain_l, want, creg_l)
-            if k < 0:
-                if any_drain and not all_drain:
-                    k = ov.best_healthy(drain_l)
-                    v = gang_down(min(g, ov._cfree[k]), int(demand[i]))
-                    if v < int(min_g[i]):
+        with self.prof.span("phase_b"):
+            drain_l = drain.tolist() if any_drain else None
+            all_drain = bool(drain.all()) if any_drain else False
+            creg_l = creg.tolist()
+            ch_l = changed.tolist()
+            stay_l = staying[changed].tolist()
+            g_l = galloc[changed].tolist()
+            run_l = running[changed].tolist()
+            jreg_l = jreg[changed].tolist()
+            rows_l = rows[changed].tolist()
+            jcl_l = jcl[changed].tolist()
+            hasc_l = has_cluster[changed].tolist()
+            for t, i in enumerate(ch_l):
+                if stay_l[t]:
+                    continue
+                g = g_l[t]
+                want = jreg_l[t] if run_l[t] and jreg_l[t] >= 0 else -1
+                k = ov.pick_cluster(g, drain_l, want, creg_l)
+                if k < 0:
+                    if any_drain and not all_drain:
+                        k = ov.best_healthy(drain_l)
+                        v = gang_down(min(g, ov._cfree[k]), int(demand[i]))
+                        if v < int(min_g[i]):
+                            k = ov.best_cluster()
+                            v = gang_down(min(g, ov._cfree[k]), int(demand[i]))
+                    else:
                         k = ov.best_cluster()
                         v = gang_down(min(g, ov._cfree[k]), int(demand[i]))
-                else:
-                    k = ov.best_cluster()
-                    v = gang_down(min(g, ov._cfree[k]), int(demand[i]))
-                if v < int(min_g[i]):
-                    v = 0
-                if v == 0:
-                    galloc[i] = 0
-                    if run_l[t]:
-                        preempt[i] = True
-                    continue
-                galloc[i] = v
-                g = v
-            ov.fit_any(rows_l[t], k, g)
-            placed[i] = k
-            fresh[i] = len(ov.assigns) - 1
-            if run_l[t] and hasc_l[t] and k != jcl_l[t]:
-                migrate[i] = True
-        # phase C: work conservation as a threshold scan (see docstring)
-        left = int(ov.cfree.sum())
-        if left > 0:
-            cand = order_p[
-                (placed[order_p] < 0) | (galloc[order_p] < demand[order_p])
-            ]
-            never = np.int64(2**62)
-            thr = np.full(cand.size, never)
-            wk = np.full(cand.size, -1, np.int64)
-            grow = placed[cand] >= 0
-            gi = cand[grow]
-            if gi.size:
-                wk[grow] = placed[gi]
-                gg = galloc[gi]
-                dd = demand[gi]
-                delta = np.empty(gi.size, np.int64)
-                for d in np.unique(dd):
-                    m = dd == d
-                    divs = np.asarray(splice_divisors(int(d)), np.int64)
-                    # next compatible world size above the current grant
-                    delta[m] = (
-                        divs[np.searchsorted(divs, gg[m], side="right")] - gg[m]
-                    )
-                thr[grow] = delta
-            ai = cand[~grow]
-            if ai.size:
-                dd = demand[ai]
-                mm = np.maximum(1, min_g[ai])
-                base_m = int(mm.max()) + 1
-                uk, inv = np.unique(dd * base_m + mm, return_inverse=True)
-                ut = np.fromiter(
-                    (floor_gang(int(u) // base_m, int(u) % base_m) for u in uk),
-                    np.int64,
-                    uk.size,
-                )
-                tau = ut[inv]
-                thr[~grow] = np.where(tau > 0, tau, never)
-            ch = 4096
-            pos = 0
-            while pos < cand.size and left > 0:
-                lim = min(pos + ch, cand.size)
-                cw = wk[pos:lim]
-                m_free = int(ov.cfree.max())
-                cur = np.where(cw >= 0, ov.cfree[np.maximum(cw, 0)], m_free)
-                for i in cand[pos:lim][cur >= thr[pos:lim]]:
-                    if left <= 0:
-                        break
-                    k = int(placed[i])
-                    if k >= 0:
-                        if galloc[i] >= demand[i]:
-                            continue
-                        rem = int(ov.cfree[k])
-                        if rem <= 0:
-                            continue
-                        g = int(galloc[i])
-                        hi_v = min(int(demand[i]), g + rem)
-                        lad = gang_values(int(demand[i]), g + 1, hi_v)
-                        if not lad:
-                            continue
-                        v = int(lad[0])
-                        ii = int(i)
-                        if ii in fresh:
-                            ov.undo(fresh[ii])
-                        else:
-                            ov.release_row(int(rows[i]))
-                        ov.fit_any(int(rows[i]), k, v)
-                        fresh[ii] = len(ov.assigns) - 1
-                        galloc[i] = v
-                        left -= v - g
+                    if v < int(min_g[i]):
+                        v = 0
+                    if v == 0:
+                        galloc[i] = 0
+                        if run_l[t]:
+                            preempt[i] = True
                         continue
-                    d_i, m_i = int(demand[i]), int(min_g[i])
-                    if any_drain and not drain.all():
-                        k = int(np.argmax(np.where(~drain, ov.cfree, -1)))
-                        v = gang_down(int(min(d_i, ov.cfree[k])), d_i)
-                        if v < m_i:
+                    galloc[i] = v
+                    g = v
+                ov.fit_any(rows_l[t], k, g)
+                placed[i] = k
+                fresh[i] = len(ov.assigns) - 1
+                if run_l[t] and hasc_l[t] and k != jcl_l[t]:
+                    migrate[i] = True
+        # phase C: work conservation as a threshold scan (see docstring)
+        with self.prof.span("phase_c"):
+            left = int(ov.cfree.sum())
+            if left > 0:
+                cand = order_p[
+                    (placed[order_p] < 0) | (galloc[order_p] < demand[order_p])
+                ]
+                never = np.int64(2**62)
+                thr = np.full(cand.size, never)
+                wk = np.full(cand.size, -1, np.int64)
+                grow = placed[cand] >= 0
+                gi = cand[grow]
+                if gi.size:
+                    wk[grow] = placed[gi]
+                    gg = galloc[gi]
+                    dd = demand[gi]
+                    delta = np.empty(gi.size, np.int64)
+                    for d in np.unique(dd):
+                        m = dd == d
+                        divs = np.asarray(splice_divisors(int(d)), np.int64)
+                        # next compatible world size above the current grant
+                        delta[m] = (
+                            divs[np.searchsorted(divs, gg[m], side="right")]
+                            - gg[m]
+                        )
+                    thr[grow] = delta
+                ai = cand[~grow]
+                if ai.size:
+                    dd = demand[ai]
+                    mm = np.maximum(1, min_g[ai])
+                    base_m = int(mm.max()) + 1
+                    uk, inv = np.unique(dd * base_m + mm, return_inverse=True)
+                    ut = np.fromiter(
+                        (
+                            floor_gang(int(u) // base_m, int(u) % base_m)
+                            for u in uk
+                        ),
+                        np.int64,
+                        uk.size,
+                    )
+                    tau = ut[inv]
+                    thr[~grow] = np.where(tau > 0, tau, never)
+                ch = 4096
+                pos = 0
+                while pos < cand.size and left > 0:
+                    lim = min(pos + ch, cand.size)
+                    cw = wk[pos:lim]
+                    m_free = int(ov.cfree.max())
+                    cur = np.where(cw >= 0, ov.cfree[np.maximum(cw, 0)], m_free)
+                    for i in cand[pos:lim][cur >= thr[pos:lim]]:
+                        if left <= 0:
+                            break
+                        k = int(placed[i])
+                        if k >= 0:
+                            if galloc[i] >= demand[i]:
+                                continue
+                            rem = int(ov.cfree[k])
+                            if rem <= 0:
+                                continue
+                            g = int(galloc[i])
+                            hi_v = min(int(demand[i]), g + rem)
+                            lad = gang_values(int(demand[i]), g + 1, hi_v)
+                            if not lad:
+                                continue
+                            v = int(lad[0])
+                            ii = int(i)
+                            if ii in fresh:
+                                ov.undo(fresh[ii])
+                            else:
+                                ov.release_row(int(rows[i]))
+                            ov.fit_any(int(rows[i]), k, v)
+                            fresh[ii] = len(ov.assigns) - 1
+                            galloc[i] = v
+                            left -= v - g
+                            continue
+                        d_i, m_i = int(demand[i]), int(min_g[i])
+                        if any_drain and not drain.all():
+                            k = int(np.argmax(np.where(~drain, ov.cfree, -1)))
+                            v = gang_down(int(min(d_i, ov.cfree[k])), d_i)
+                            if v < m_i:
+                                k = int(np.argmax(ov.cfree))
+                                v = gang_down(int(min(d_i, ov.cfree[k])), d_i)
+                        else:
                             k = int(np.argmax(ov.cfree))
                             v = gang_down(int(min(d_i, ov.cfree[k])), d_i)
-                    else:
-                        k = int(np.argmax(ov.cfree))
-                        v = gang_down(int(min(d_i, ov.cfree[k])), d_i)
-                    if v <= 0 or v < m_i:
-                        continue
-                    ov.fit_any(int(rows[i]), k, v)
-                    fresh[int(i)] = len(ov.assigns) - 1
-                    placed[i] = k
-                    galloc[i] = v
-                    left -= v
-                    preempt[i] = False
-                    if running[i] and has_cluster[i] and k != int(jcl[i]):
-                        migrate[i] = True
-                pos = lim
+                        if v <= 0 or v < m_i:
+                            continue
+                        ov.fit_any(int(rows[i]), k, v)
+                        fresh[int(i)] = len(ov.assigns) - 1
+                        placed[i] = k
+                        galloc[i] = v
+                        left -= v
+                        preempt[i] = False
+                        if running[i] and has_cluster[i] and k != int(jcl[i]):
+                            migrate[i] = True
+                    pos = lim
         assigns = [a for a in ov.assigns if a is not None]
         return galloc, placed, preempt, migrate, (nm, ov.released, assigns)
 

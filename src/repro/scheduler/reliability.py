@@ -50,6 +50,13 @@ from repro.scheduler.costs import CostModel
 
 FAILURE_LEVELS = ("device", "node", "cluster", "region")
 
+# Event-kind vocabulary: "failure" is the generic unplanned event, the
+# named scenarios refine it (ECC flake, rack power, cluster outage,
+# planned drain).  telemetry.py folds these into its cause-code table so
+# a FAILURE row in the event log says *what kind* of failure killed the
+# job — keep this tuple the single source of that vocabulary.
+FAILURE_KINDS = ("failure", "flake", "power", "outage", "drain")
+
 # stable per-level stream offsets: adding a level or resampling one never
 # perturbs the others' streams
 _LEVEL_STREAM = {level: i for i, level in enumerate(FAILURE_LEVELS)}
@@ -76,6 +83,7 @@ class FailureEvent:
 
     def __post_init__(self):
         assert self.level in FAILURE_LEVELS, self.level
+        assert self.kind in FAILURE_KINDS, self.kind
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)

@@ -38,6 +38,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.scheduler.costs import CostModel, default_checkpoint_bytes
+from repro.scheduler.telemetry import C_SPIKE, E_LOAN, E_RECLAIM
 from repro.scheduler.types import Job
 from repro.serving.engine import ReplicaProfile
 
@@ -330,6 +331,12 @@ class ServingTier:
         self.reclaim_latencies: List[float] = []
         self.loaned_gpu_seconds = 0.0
         self.serving_gpu_seconds = 0.0
+        # observability (scheduler/telemetry.py): when the simulator runs
+        # with telemetry, this is its EventLog and end_tick emits LOAN /
+        # RECLAIM rows (job = service index).  last_loan_out feeds the
+        # per-tick metrics series.
+        self.telemetry = None
+        self.last_loan_out = 0.0
 
     def _distribute(self, replicas: np.ndarray) -> np.ndarray:
         """Round-robin per-service replica counts over their shards."""
@@ -411,26 +418,55 @@ class ServingTier:
         t.windows += 1
         t.prev_replicas = replicas.copy()
         if self.cfg.loaning:
+            ev = self.telemetry
             deficit = self.target_gpus > alloc
             had_open = ~np.isnan(t.deficit_open)
             t.deficit_open[deficit & ~had_open] = t0
             closed = ~deficit & had_open
             for i in np.nonzero(closed)[0]:
-                self.reclaim_latencies.append(
-                    now - float(t.deficit_open[i]) + float(warm[i])
-                )
+                latency = now - float(t.deficit_open[i]) + float(warm[i])
+                self.reclaim_latencies.append(latency)
+                if ev is not None:
+                    ev.append(
+                        now,
+                        E_RECLAIM,
+                        job=int(i),
+                        cause=C_SPIKE,
+                        gpus=int(alloc[i]),
+                        seconds=latency,
+                    )
             t.deficit_open[closed] = np.nan
             # a rise satisfied in the same tick: reclaim cost = residual warm
             instant = self._rose & ~deficit & ~had_open
             for i in np.nonzero(instant)[0]:
-                self.reclaim_latencies.append(float(warm[i]))
+                latency = float(warm[i])
+                self.reclaim_latencies.append(latency)
+                if ev is not None:
+                    ev.append(
+                        now,
+                        E_RECLAIM,
+                        job=int(i),
+                        cause=C_SPIKE,
+                        gpus=int(alloc[i]),
+                        seconds=latency,
+                    )
             loan_out = float(np.maximum(0, self.reserved_gpus - alloc).sum())
-            self.loaned_gpu_seconds += min(loan_out, best_effort_allocated) * (
-                self.tick
-            )
+            loaned = min(loan_out, best_effort_allocated)
+            self.last_loan_out = loaned
+            self.loaned_gpu_seconds += loaned * self.tick
+            if ev is not None and loaned > 0:
+                # one aggregate row per tick: reserved serving capacity
+                # currently flowing to best-effort training
+                ev.append(now, E_LOAN, gpus=int(loaned), seconds=self.tick)
         self.serving_gpu_seconds += float(alloc.sum()) * self.tick
 
     # -- results --------------------------------------------------------
+    def attainment(self) -> float:
+        """Cumulative fleet SLO attainment so far (cheap; the per-tick
+        metrics series samples it every tick)."""
+        windows = int(self.table.windows.sum())
+        return (int(self.table.ok_windows.sum()) / windows) if windows else 1.0
+
     def summary(self) -> Dict[str, object]:
         t = self.table
         windows = int(t.windows.sum())

@@ -57,11 +57,30 @@ import numpy as np
 
 from repro.core.sla import TIERS, FleetSLAAccounts, FleetSlotAccount, GpuFractionAccount
 from repro.scheduler.costs import CostModel, RegionTopology, defrag_worthwhile
-from repro.scheduler.job_table import JobTable, JobView, TableJob
+from repro.scheduler.job_table import TIER_CODE, JobTable, JobView, TableJob
 from repro.scheduler.node_map import NodeMap, floor_gang
 from repro.scheduler.policy import Decision
 from repro.scheduler.reliability import CheckpointCadence, FailureModel, FailureTrace
 from repro.scheduler.serving import ServingConfig, ServingTier
+from repro.scheduler.telemetry import (
+    C_DRAIN,
+    C_FAILURE,
+    C_NONE,
+    C_POLICY,
+    C_PREEMPT,
+    CAUSE_CODE,
+    E_ADMIT,
+    E_COMPLETE,
+    E_DEFRAG,
+    E_FAILURE,
+    E_MIGRATE,
+    E_PREEMPT,
+    E_RESIZE,
+    E_RESTORE,
+    E_SNAPSHOT,
+    F_CROSS_REGION,
+    FleetTelemetry,
+)
 from repro.scheduler.types import Cluster, Fleet, Job, Region
 
 # tier gpu_fraction lookup by JobTable tier code (same enumeration order)
@@ -106,6 +125,11 @@ class SimConfig:
     # seeded traffic trace, loaning idle reserved capacity to best-effort
     # training between spikes.  None = no serving tier.
     serving: Optional[ServingConfig] = None
+    # observability (scheduler/telemetry.py): True builds a FleetTelemetry
+    # (structured event log + per-tick metrics + enabled profiler), or pass
+    # an existing FleetTelemetry to emit into.  Strictly read-only w.r.t.
+    # scheduling — decision digests are pinned identical either way.
+    telemetry: Union[bool, "FleetTelemetry", None] = None
 
     def costs(self) -> CostModel:
         if self.cost_model is not None:
@@ -179,34 +203,69 @@ class SimResult:
     serving_reserved_gpus: int = 0
 
     def summary(self) -> str:
-        sla = ", ".join(f"{t}={v:.3f}" for t, v in self.sla_attainment.items())
-        down = ", ".join(
-            f"{t}={v / 3600:.1f}h" for t, v in self.downtime_by_tier.items()
+        """One-screen human-readable run report.
+
+        Multi-line: a fleet header, a per-tier table (SLA, goodput,
+        mean JCT, charged downtime), the mechanism counters, and — only
+        when present — failure, serving and fragmentation lines.  Used
+        for ``sched_scale.py`` / ``sched_sim.py`` stdout.
+        """
+        lines = [
+            f"fleet      util {self.utilization:.3f}"
+            f" | goodput {self.goodput_fraction:.3f}"
+            f" | completed {self.completed}/{self.total_jobs}"
+            f" | queued {self.queue_seconds / 3600:.0f} job-h",
+            "tier         sla    goodput  mean-jct  downtime",
+        ]
+        for t in self.sla_attainment:
+            jct = self.mean_jct.get(t, float("nan"))
+            lines.append(
+                f"  {t:<9} {self.sla_attainment[t]:>6.3f}"
+                f"  {self.goodput_by_tier.get(t, 1.0):>6.3f}"
+                f"  {jct / 3600:>7.1f}h"
+                f"  {self.downtime_by_tier.get(t, 0.0) / 3600:>7.1f}h"
+            )
+        lines.append(
+            f"mechanisms preempt {self.preemptions}"
+            f" | migrate {self.migrations}"
+            f" (cross {self.migrations_cross_region},"
+            f" defrag {self.defrag_migrations})"
+            f" | resize {self.resizes}"
+            f" | restore {self.restores}"
+            f" | snapshots {self.snapshots}"
         )
-        out = (
-            f"util={self.utilization:.3f} sla[{sla}] "
-            f"done={self.completed}/{self.total_jobs} "
-            f"preempt={self.preemptions} migr={self.migrations} "
-            f"(cross={self.migrations_cross_region}) "
-            f"resize={self.resizes} restore={self.restores} "
-            f"downtime[{down}]"
-        )
-        if self.failure_events or self.snapshots:
-            out += (
-                f" failures={self.failure_events} killed={self.job_failures} "
-                f"snapshots={self.snapshots} "
-                f"lost={self.lost_work_gpu_seconds / 3600:.1f} gpu-h "
-                f"goodput={self.goodput_fraction:.3f}"
+        if self.failure_events or self.job_failures:
+            restarts = ", ".join(
+                f"{c} {n}" for c, n in sorted(self.restarts_by_cause.items())
+            )
+            ettr = ", ".join(
+                f"{t} {v:.0f}s" for t, v in self.ettr_by_tier.items()
+            )
+            lines.append(
+                f"failures   events {self.failure_events}"
+                f" | jobs killed {self.job_failures}"
+                f" | lost {self.lost_work_gpu_seconds / 3600:.0f} gpu-h"
+                + (f" | restarts[{restarts}]" if restarts else "")
+                + (f" | ettr[{ettr}]" if ettr else "")
             )
         if self.serving_windows:
-            out += (
-                f" slo={self.serving_slo_attainment:.4f} "
-                f"reclaims={self.serving_reclaims} "
-                f"(max={self.serving_reclaim_max_seconds:.0f}s/"
-                f"{self.serving_reclaim_deadline_seconds:.0f}s) "
-                f"loaned={self.serving_loaned_gpu_hours:.0f} gpu-h"
+            lines.append(
+                f"serving    slo {self.serving_slo_attainment:.4f}"
+                f" ({self.serving_violations}/{self.serving_windows}"
+                " windows missed)"
+                f" | reclaims {self.serving_reclaims}"
+                f" (max {self.serving_reclaim_max_seconds:.0f}s"
+                f" <= {self.serving_reclaim_deadline_seconds:.0f}s)"
+                f" | loaned {self.serving_loaned_gpu_hours:.0f} gpu-h"
+                f" | reserved {self.serving_reserved_gpus} GPUs"
             )
-        return out
+        if self.fragmentation_stranded_gpus or self.defrag_migrations:
+            lines.append(
+                "fragmentation stranded"
+                f" {self.fragmentation_stranded_gpus:.1f} GPUs (time-avg)"
+                f" | defrag moves {self.defrag_migrations}"
+            )
+        return "\n".join(lines)
 
 
 def make_fleet(
@@ -324,6 +383,23 @@ class FleetSimulator:
         # downtime the simulator charges
         if hasattr(policy, "bind_costs"):
             policy.bind_costs(self.costs, self.cfg.tick_seconds)
+        # observability: build (or adopt) the telemetry bundle.  The event
+        # log and metrics are emitted from the apply / reliability /
+        # serving paths below; the policy's decide-pass profiler is
+        # swapped for the bundle's enabled one so its spans land in the
+        # exported trace.  All of it is read-only w.r.t. decisions.
+        tele = self.cfg.telemetry
+        if tele is True:
+            tele = FleetTelemetry()
+        self.tele: Optional[FleetTelemetry] = tele if tele else None
+        self._ev = self.tele.events if self.tele is not None else None
+        if self.tele is not None:
+            if hasattr(policy, "bind_telemetry"):
+                policy.bind_telemetry(self.tele)
+            if self.serving is not None:
+                self.serving.telemetry = self.tele.events
+        self._m_prev = {"decide": 0.0, "place": 0.0, "apply": 0.0}
+        self._stranded_prev = 0.0
         # fleet-wide SLA ledger: swap each job's pristine scalar account
         # for a ledger-backed view so SLA recording and the policy's
         # headroom consultation run as batched array passes.  Jobs handed
@@ -365,7 +441,7 @@ class FleetSimulator:
         # counts and per-job node spans (row == trace index == table
         # slot); the policy plans spans against it, _apply commits them,
         # and failures pick victims from the real node assignments
-        self._cluster_idx = {c.id: k for k, c in enumerate(fleet.clusters())}
+        self._cluster_idx = fleet.cluster_index()
         self.defrag_migrations = 0
         self._stranded_sum = 0.0
         self._frag_ticks = 0
@@ -404,7 +480,7 @@ class FleetSimulator:
         # consumed by advancing pointers; repairs are a (time, cid, amount)
         # heap where amount is the raw GPU count (cluster-granular) or the
         # failure's per-node claim list (node-granular)
-        self._fails: List[Tuple[float, str, int, float]] = []
+        self._fails: List[Tuple[float, str, int, float, int]] = []
         self._warns: List[Tuple[float, str, float]] = []
         self._fail_ptr = 0
         self._warn_ptr = 0
@@ -427,7 +503,11 @@ class FleetSimulator:
                 for cid in cids:
                     if cid not in self._cluster_by_id:
                         continue
-                    self._fails.append((e.time, cid, e.gpus, e.repair_seconds))
+                    # the event KIND rides along so a telemetry FAILURE row
+                    # can say what kind of failure killed the job
+                    self._fails.append(
+                        (e.time, cid, e.gpus, e.repair_seconds, CAUSE_CODE[e.kind])
+                    )
                     if e.warning_seconds > 0:
                         self._warns.append((e.time - e.warning_seconds, cid, e.time))
             self._fails.sort()
@@ -463,6 +543,14 @@ class FleetSimulator:
                     ),
                     (n,),
                 ).copy()
+        if self.tele is not None:
+            self.tele.meta.update(
+                reliability=self._reliability,
+                clusters=[c.id for c in fleet.clusters()],
+                tick_seconds=self.cfg.tick_seconds,
+                jobs=len(self._jobs_list),
+                job_ids=[j.id for j in self._jobs_list],
+            )
 
     # -- cost charging ---------------------------------------------------------
     def _charge(self, j: Job, seconds: float) -> None:
@@ -520,7 +608,7 @@ class FleetSimulator:
                 if j.done_at is None and j.allocated > 0 and j.cluster is not None:
                     by_cluster.setdefault(j.cluster, []).append(j)
         changed: List[Job] = []
-        for e_time, cid, gpus, repair in fired:
+        for e_time, cid, gpus, repair, ckind in fired:
             c = self._cluster_by_id[cid]
             want = c.total_gpus if gpus <= 0 else min(gpus, c.total_gpus)
             # repair is anchored to the FAILURE time, not the processing
@@ -576,8 +664,20 @@ class FleetSimulator:
             self.failure_events += 1
             for j in victims:
                 lost = max(0.0, j.progress - j.snap_progress)
-                self.lost_work_gpu_seconds += lost * j.gpu_hours * 3600.0
-                self._lost_by_tier[j.tier] += lost * j.gpu_hours * 3600.0
+                lost_gpu_seconds = lost * j.gpu_hours * 3600.0
+                self.lost_work_gpu_seconds += lost_gpu_seconds
+                self._lost_by_tier[j.tier] += lost_gpu_seconds
+                if self._ev is not None:
+                    self._ev.append(
+                        now,
+                        E_FAILURE,
+                        job=self._index[j.id],
+                        cluster=self._cluster_idx.get(j.cluster, -1),
+                        tier=TIER_CODE[j.tier],
+                        cause=ckind,
+                        gpus=j.allocated,
+                        seconds=lost_gpu_seconds,
+                    )
                 j.progress = j.snap_progress
                 j.allocated = 0
                 j.failures += 1
@@ -605,8 +705,19 @@ class FleetSimulator:
                 continue
             j.snap_progress = j.progress
             j.snap_time = now
-            self._charge(j, self.costs.snapshot_seconds(j.checkpoint_bytes))
+            cost = self.costs.snapshot_seconds(j.checkpoint_bytes)
+            self._charge(j, cost)
             self.snapshots += 1
+            if self._ev is not None:
+                self._ev.append(
+                    now,
+                    E_SNAPSHOT,
+                    job=i,
+                    cluster=self._cluster_idx.get(j.cluster, -1),
+                    tier=TIER_CODE[j.tier],
+                    gpus=j.allocated,
+                    seconds=cost,
+                )
             changed.append(j)
         return changed
 
@@ -633,6 +744,19 @@ class FleetSimulator:
             t.downtime_until[dp] = np.maximum(t.downtime_until[dp], now) + cost[pos]
             t.downtime_seconds[dp] += cost[pos]
         self.snapshots += int(due.size)
+        if self._ev is not None:
+            # batched append — one row per due job, identical to the
+            # scalar sweep's per-job appends (zero-cost snapshots emit a
+            # 0.0-second row exactly like _charge's no-op)
+            self._ev.append_batch(
+                now,
+                E_SNAPSHOT,
+                job=due,
+                cluster=t.cluster_idx[due],
+                tier=t.tier_code[due],
+                gpus=t.allocated[due],
+                seconds=cost,
+            )
 
     # -- decision application (shared by both event loops) ---------------------
     def _apply(self, decision: Decision) -> None:
@@ -659,6 +783,16 @@ class FleetSimulator:
                 j.preemptions += 1
                 self.preemptions += 1
                 j.restore_debt += self.costs.preempt_seconds(j.checkpoint_bytes)
+                if self._ev is not None:
+                    self._ev.append(
+                        self.now,
+                        E_PREEMPT,
+                        job=self._index[j.id],
+                        cluster=self._cluster_idx.get(j.cluster, -1),
+                        tier=TIER_CODE[j.tier],
+                        cause=C_POLICY,
+                        gpus=j.allocated,
+                    )
                 j.allocated = 0
                 j.queued_since = self.now
                 if self._reliability:
@@ -824,11 +958,22 @@ class FleetSimulator:
                 j.migrations += 1
                 self.migrations += 1
                 self.defrag_migrations += 1
-                self._charge(j, self.costs.migrate_seconds(j.checkpoint_bytes))
+                charged = self.costs.migrate_seconds(j.checkpoint_bytes)
+                self._charge(j, charged)
                 if self._reliability:
                     # the migration round trip checkpoints state
                     j.snap_progress = j.progress
                     j.snap_time = self.now
+                if self._ev is not None:
+                    self._ev.append(
+                        self.now,
+                        E_DEFRAG,
+                        job=self._index[j.id],
+                        cluster=self._cluster_idx.get(j.cluster, -1),
+                        tier=TIER_CODE[j.tier],
+                        gpus=j.allocated,
+                        seconds=charged,
+                    )
             return True
         return False
 
@@ -868,6 +1013,21 @@ class FleetSimulator:
         pl = placed[rest]
         hasc = pl >= 0
         t.cluster_idx[rs[hasc]] = pl[hasc]
+        if self._ev is not None:
+            # the only lifecycle transition left in the bulk path is the
+            # free first admission (prev 0 -> g without a checkpoint);
+            # everything else was classified through _apply_one above
+            adm = np.flatnonzero((prev[rest] == 0) & (g > 0))
+            if adm.size:
+                ra = rs[adm]
+                self._ev.append_batch(
+                    self.now,
+                    E_ADMIT,
+                    job=ra,
+                    cluster=t.cluster_idx[ra],
+                    tier=t.tier_code[ra],
+                    gpus=g[adm],
+                )
         if self.cfg.validate:
             self._check_capacity_table(slots, gpus, placed)
 
@@ -887,6 +1047,16 @@ class FleetSimulator:
             if self._reliability:
                 j.snap_progress = j.progress
                 j.snap_time = self.now
+            if self._ev is not None:
+                self._ev.append(
+                    self.now,
+                    E_PREEMPT,
+                    job=self._index[j.id],
+                    cluster=self._cluster_idx.get(j.cluster, -1),
+                    tier=TIER_CODE[j.tier],
+                    cause=C_POLICY,
+                    gpus=prev_g,
+                )
         elif prev_g == 0 and gpus > 0:
             # (re)start.  First admission is free; a restore pays
             # download + rendezvous + the carried preempt debt.  A
@@ -897,13 +1067,13 @@ class FleetSimulator:
                 self.restores += 1
                 src = self.fleet.region_of(j.cluster)
                 dst = self.fleet.region_of(cluster) if cluster is not None else src
-                if src is not None and dst is not None and src != dst:
+                cross = src is not None and dst is not None and src != dst
+                if cross:
                     self.restores_cross_region += 1
-                self._charge(
-                    j,
-                    j.restore_debt
-                    + self.costs.restore_seconds(j.checkpoint_bytes, src, dst),
+                charged = j.restore_debt + self.costs.restore_seconds(
+                    j.checkpoint_bytes, src, dst
                 )
+                self._charge(j, charged)
                 j.restore_debt = 0.0
                 if j.failed_at is not None:
                     # restart after an unplanned failure: ETTR sample
@@ -917,6 +1087,29 @@ class FleetSimulator:
                     self.restarts_by_cause[cause] = (
                         self.restarts_by_cause.get(cause, 0) + 1
                     )
+                if self._ev is not None:
+                    dcid = cluster if cluster is not None else j.cluster
+                    self._ev.append(
+                        self.now,
+                        E_RESTORE,
+                        job=self._index[j.id],
+                        cluster=self._cluster_idx.get(dcid, -1),
+                        tier=TIER_CODE[j.tier],
+                        cause=C_FAILURE if cause == "failure" else C_PREEMPT,
+                        gpus=gpus,
+                        seconds=charged,
+                        flags=F_CROSS_REGION if cross else 0,
+                    )
+            elif self._ev is not None:
+                dcid = cluster if cluster is not None else j.cluster
+                self._ev.append(
+                    self.now,
+                    E_ADMIT,
+                    job=self._index[j.id],
+                    cluster=self._cluster_idx.get(dcid, -1),
+                    tier=TIER_CODE[j.tier],
+                    gpus=gpus,
+                )
         elif (
             gpus > 0
             and cluster is not None
@@ -931,19 +1124,45 @@ class FleetSimulator:
             self.migrations += 1
             src = self.fleet.region_of(j.cluster)
             dst = self.fleet.region_of(cluster)
-            if src is not None and dst is not None and src != dst:
+            cross = src is not None and dst is not None and src != dst
+            if cross:
                 self.migrations_cross_region += 1
-            self._charge(
-                j, self.costs.migrate_seconds(j.checkpoint_bytes, src, dst)
-            )
+            charged = self.costs.migrate_seconds(j.checkpoint_bytes, src, dst)
+            self._charge(j, charged)
             if self._reliability:
                 j.snap_progress = j.progress
                 j.snap_time = self.now
+            if self._ev is not None:
+                # a migration off a draining cluster is a drain
+                # evacuation — that's the cause the event log records
+                drain = self._cluster_by_id[j.cluster].draining
+                self._ev.append(
+                    self.now,
+                    E_MIGRATE,
+                    job=self._index[j.id],
+                    cluster=self._cluster_idx.get(cluster, -1),
+                    tier=TIER_CODE[j.tier],
+                    cause=C_DRAIN if drain else C_POLICY,
+                    gpus=gpus,
+                    seconds=charged,
+                    flags=F_CROSS_REGION if cross else 0,
+                )
         elif gpus > 0 and gpus != prev_g:
             # in-place transparent resize (splice swap)
             j.resizes += 1
             self.resizes += 1
-            self._charge(j, self.costs.resize_seconds(j.checkpoint_bytes))
+            charged = self.costs.resize_seconds(j.checkpoint_bytes)
+            self._charge(j, charged)
+            if self._ev is not None:
+                self._ev.append(
+                    self.now,
+                    E_RESIZE,
+                    job=self._index[j.id],
+                    cluster=self._cluster_idx.get(j.cluster, -1),
+                    tier=TIER_CODE[j.tier],
+                    gpus=gpus,
+                    seconds=charged,
+                )
         j.allocated = gpus
         if gpus > 0:
             j.ever_ran = True
@@ -1014,6 +1233,15 @@ class FleetSimulator:
                 if eff > 0:
                     j.progress = min(1.0, j.progress + j.rate() * eff)
                     if j.progress >= 1.0 - 1e-12:
+                        if self._ev is not None:
+                            self._ev.append(
+                                end,
+                                E_COMPLETE,
+                                job=self._index[j.id],
+                                cluster=self._cluster_idx.get(j.cluster, -1),
+                                tier=TIER_CODE[j.tier],
+                                gpus=j.allocated,
+                            )
                         j.done_at = end
                         j.allocated = 0
                         _release_account(j)
@@ -1082,6 +1310,67 @@ class FleetSimulator:
             )
         self.serving.end_tick(now, alloc, dtu, basic)
 
+    # ==================== per-tick telemetry ==================================
+
+    def _record_tick_metrics(self, now: float) -> None:
+        """One MetricsSeries row per scheduler tick (telemetry only;
+        computed OUTSIDE the decide path so the decide-time overhead gate
+        measures the profiler alone)."""
+        tele = self.tele
+        n = len(self._jobs_list)
+        nt = len(TIER_CODE)
+        if self._table is not None:
+            tb = self._table
+            alloc = tb.allocated[:n]
+            live = np.isnan(tb.done_at[:n]) & (tb.arrival[:n] <= now)
+            total_alloc = int(alloc[live].sum())
+            queued = live & (alloc == 0)
+            counts = np.bincount(tb.tier_code[:n][queued], minlength=nt)
+        else:
+            counts = np.zeros(nt, np.int64)
+            total_alloc = 0
+            for j in self._jobs_list:
+                if j.done_at is not None or j.arrival > now:
+                    continue
+                if j.allocated > 0:
+                    total_alloc += j.allocated
+                else:
+                    counts[TIER_CODE[j.tier]] += 1
+        cap = self.fleet.capacity()
+        consumed = self.busy_gpu_seconds + self.gpu_seconds_dead
+        goodput = (
+            max(0.0, self.busy_gpu_seconds - self.lost_work_gpu_seconds)
+            / consumed
+            if consumed > 0
+            else 1.0
+        )
+        slo, loaned = 1.0, 0.0
+        if self.serving is not None:
+            slo = self.serving.attainment()
+            loaned = float(self.serving.last_loan_out)
+        stranded = self._stranded_sum - self._stranded_prev
+        self._stranded_prev = self._stranded_sum
+        prof, prev = tele.prof, self._m_prev
+        dec = prof.total("decide")
+        plc = prof.total("place")
+        app = prof.total("apply")
+        tele.metrics.record(
+            time=now,
+            allocated_gpus=float(total_alloc),
+            utilization=total_alloc / cap if cap else 0.0,
+            queue_premium=float(counts[TIER_CODE["premium"]]),
+            queue_standard=float(counts[TIER_CODE["standard"]]),
+            queue_basic=float(counts[TIER_CODE["basic"]]),
+            stranded_gpus=stranded,
+            loaned_gpus=loaned,
+            goodput=goodput,
+            slo_attainment=slo,
+            decide_seconds=dec - prev["decide"],
+            place_seconds=plc - prev["place"],
+            apply_seconds=app - prev["apply"],
+        )
+        prev["decide"], prev["place"], prev["apply"] = dec, plc, app
+
     def _run_legacy_loop(self) -> None:
         cfg = self.cfg
         events = [j.arrival for j in self.jobs.values()]
@@ -1104,11 +1393,19 @@ class FleetSimulator:
                 self._tick_reliability([j for j in arrived if j.done_at is None])
             if self.serving is not None:
                 self._serving_begin(self.now)
+            if self.tele is not None:
+                self.tele.prof.set_anchor(self.now)
             decision = self.policy.decide(self.now, arrived, self.fleet)
-            self._apply(decision)
+            if self.tele is not None:
+                with self.tele.prof.span("apply"):
+                    self._apply(decision)
+            else:
+                self._apply(decision)
             self._frag_defrag_tick(arrived)
             if self.serving is not None and self._svc_open:
                 self._serving_end(self.now)
+            if self.tele is not None:
+                self._record_tick_metrics(self.now)
 
     # ==================== vectorized event loop ===============================
 
@@ -1213,6 +1510,32 @@ class FleetSimulator:
         # the legacy loop's semantics)
         done_now = act[(prog >= 1.0 - 1e-12) & running]
         if done_now.size:
+            if self._ev is not None:
+                if self._table is not None:
+                    cl = self._table.cluster_idx[done_now]
+                    tc = self._table.tier_code[done_now]
+                else:
+                    cl = np.fromiter(
+                        (
+                            self._cluster_idx.get(jobs[i].cluster, -1)
+                            for i in done_now
+                        ),
+                        np.int64,
+                        done_now.size,
+                    )
+                    tc = np.fromiter(
+                        (TIER_CODE[jobs[i].tier] for i in done_now),
+                        np.int64,
+                        done_now.size,
+                    )
+                self._ev.append_batch(
+                    t1,
+                    E_COMPLETE,
+                    job=done_now,
+                    cluster=cl,
+                    tier=tc,
+                    gpus=self._alloc[done_now].astype(np.int64),
+                )
             self._done[done_now] = True
             self._alloc[done_now] = 0
             nm = self.fleet.node_map
@@ -1286,8 +1609,14 @@ class FleetSimulator:
                             self._downtime_until[i] = j.downtime_until
                 if self.serving is not None:
                     self._serving_begin(t)
+                if self.tele is not None:
+                    self.tele.prof.set_anchor(t)
                 decision = self.policy.decide(t, active_jobs, self.fleet)
-                self._apply(decision)
+                if self.tele is not None:
+                    with self.tele.prof.span("apply"):
+                        self._apply(decision)
+                else:
+                    self._apply(decision)
                 self._frag_defrag_tick(active_jobs)
                 if self._table is None:
                     for i in act:
@@ -1295,6 +1624,8 @@ class FleetSimulator:
                         self._downtime_until[i] = jobs[i].downtime_until
                 if self.serving is not None and self._svc_open:
                     self._serving_end(t)
+                if self.tele is not None:
+                    self._record_tick_metrics(t)
             t += cfg.tick_seconds
         # final sync for jobs still in flight at the horizon (table-backed
         # jobs read the live columns; nothing to sync)

@@ -102,6 +102,17 @@ class Fleet:
     def clusters(self) -> List[Cluster]:
         return [c for r in self.regions for c in r.clusters]
 
+    def cluster_index(self) -> dict:
+        """Cluster id -> flat fleet index, in ``clusters()`` order
+        (cached; clusters are static for a fleet's lifetime).  The
+        simulator's apply path and the telemetry event log both key
+        clusters by this index."""
+        idx = self.__dict__.get("_cluster_index")
+        if idx is None:
+            idx = {c.id: k for k, c in enumerate(self.clusters())}
+            self.__dict__["_cluster_index"] = idx
+        return idx
+
     def region_of(self, cluster_id: Optional[str]) -> Optional[str]:
         """Region id owning ``cluster_id`` (cached; clusters are static
         for a fleet's lifetime)."""

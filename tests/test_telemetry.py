@@ -1,0 +1,276 @@
+"""Observability stack (scheduler/telemetry.py): event-log ring
+mechanics, batched-vs-scalar append equivalence, the nested-span
+profiler, Perfetto export validity, and the replay differential —
+an exported event log must fold back into the exact SimResult
+aggregates of the run that emitted it, with and without telemetry
+changing nothing about the schedule itself.
+"""
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.scheduler.costs import CostModel
+from repro.scheduler.policy import ElasticPolicy
+from repro.scheduler.reliability import CheckpointCadence, FailureModel
+from repro.scheduler.simulator import (
+    FleetSimulator,
+    SimConfig,
+    make_fleet,
+    synth_workload,
+)
+from repro.scheduler.telemetry import (
+    EVENT_KINDS,
+    EventLog,
+    FleetTelemetry,
+    Profiler,
+    check_replay,
+    export_chrome_trace,
+    read_jsonl,
+    replay_events,
+)
+
+HORIZON = 30 * 3600.0
+
+
+def _storm_sim(telemetry=True):
+    """A small fleet under a dense failure storm: exercises every event
+    family (admit/preempt/restore/migrate/resize/failure/snapshot)."""
+    fleet = make_fleet()
+    jobs = synth_workload(160, fleet.total(), seed=11)
+    model = FailureModel(
+        device_mtbf_seconds=20 * 24 * 3600.0,
+        node_mtbf_seconds=30 * 24 * 3600.0,
+        cluster_mtbf_seconds=60 * 24 * 3600.0,
+        seed=5,
+    )
+    cfg = SimConfig(
+        horizon_seconds=HORIZON,
+        cost_model=CostModel(),
+        failures=model,
+        cadence=CheckpointCadence(cost_model=CostModel()),
+        telemetry=telemetry,
+    )
+    sim = FleetSimulator(fleet, jobs, ElasticPolicy(), cfg)
+    return sim, sim.run()
+
+
+_CACHE = {}
+
+
+def _cached_storm():
+    if "storm" not in _CACHE:
+        _CACHE["storm"] = _storm_sim(telemetry=True)
+    return _CACHE["storm"]
+
+
+# ------------------------------------------------------------ event log
+def test_event_log_ring_growth():
+    log = EventLog(capacity=2)
+    for i in range(100):
+        log.append(float(i), i % len(EVENT_KINDS), job=i, gpus=2 * i)
+    assert len(log) == 100
+    assert log._cap >= 100  # doubled past the initial capacity
+    assert log.column("time").tolist() == [float(i) for i in range(100)]
+    assert log.column("gpus").tolist() == [2 * i for i in range(100)]
+    # the live view never exposes unwritten tail slots
+    assert log.column("job").shape == (100,)
+
+
+def test_append_batch_matches_scalar_appends():
+    rng = np.random.default_rng(3)
+    batched, scalar = EventLog(capacity=4), EventLog(capacity=4)
+    for _ in range(7):
+        m = int(rng.integers(1, 40))
+        jobs = rng.integers(0, 1000, m)
+        gpus = rng.integers(0, 64, m)
+        secs = rng.random(m)
+        t = float(rng.random() * 1e5)
+        kind = int(rng.integers(0, len(EVENT_KINDS)))
+        tier = int(rng.integers(0, 3))
+        batched.append_batch(
+            t, kind, job=jobs, cluster=2, tier=tier, gpus=gpus, seconds=secs
+        )
+        for j, g, s in zip(jobs, gpus, secs):
+            scalar.append(
+                t,
+                kind,
+                job=int(j),
+                cluster=2,
+                tier=tier,
+                gpus=int(g),
+                seconds=float(s),
+            )
+    assert len(batched) == len(scalar)
+    for name, _, _ in EventLog._COLUMNS:
+        assert (batched.column(name) == scalar.column(name)).all(), name
+
+
+def test_append_batch_empty_is_noop():
+    log = EventLog()
+    log.append_batch(1.0, 0, job=np.array([], np.int64))
+    assert len(log) == 0
+
+
+def test_jsonl_roundtrip_is_exact():
+    sim, _ = _cached_storm()
+    path = "/tmp/test_telemetry_events.jsonl"
+    sim.tele.events.to_jsonl(path, meta=sim.tele.meta)
+    log2, meta = read_jsonl(path)
+    assert len(log2) == len(sim.tele.events)
+    assert meta["events"] == len(sim.tele.events)
+    assert meta["reliability"] is True
+    # bit-exact: every column round-trips through JSON untouched
+    for name, _, _ in EventLog._COLUMNS:
+        assert (log2.column(name) == sim.tele.events.column(name)).all(), name
+    assert replay_events(log2) == replay_events(sim.tele.events)
+
+
+# ------------------------------------------------------------- profiler
+def test_profiler_nesting_depth_and_totals():
+    prof = Profiler(enabled=True)
+    with prof.span("outer"):
+        with prof.span("inner"):
+            pass
+        with prof.span("inner"):
+            pass
+    assert prof.counts == {"outer": 1, "inner": 2}
+    assert prof.total("outer") >= prof.total("inner") > 0.0
+    depths = {name: depth for name, depth, *_ in prof.spans}
+    assert depths == {"outer": 0, "inner": 1}
+    assert prof._depth == 0  # fully unwound
+
+
+def test_profiler_disabled_accumulates_totals_but_records_nothing():
+    prof = Profiler()  # disabled: the telemetry-off configuration
+    with prof.span("decide"):
+        pass
+    assert prof.total("decide") > 0.0
+    assert prof.counts["decide"] == 1
+    assert prof.spans == []  # no per-span memory growth when off
+
+
+def test_policy_profiler_backs_timing_properties():
+    sim, _ = _cached_storm()
+    pol = sim.policy
+    assert pol.decide_seconds == pol.prof.total("decide") > 0.0
+    assert pol.gather_seconds == pol.prof.total("gather") > 0.0
+    assert pol.node_seconds == pol.prof.total("place") > 0.0
+    # the sub-passes are nested inside decide
+    assert pol.gather_seconds + pol.node_seconds < pol.decide_seconds
+    # the bundle's profiler IS the policy's (bind_telemetry)
+    assert pol.prof is sim.tele.prof
+
+
+# ------------------------------------------------------------ replay
+def test_replay_reproduces_simresult_aggregates():
+    sim, res = _cached_storm()
+    assert res.job_failures > 0  # the storm actually bit
+    assert res.preemptions > 0
+    assert check_replay(sim.tele.events, res) == []
+
+
+def test_replay_detects_a_dropped_event():
+    sim, res = _cached_storm()
+    log = sim.tele.events
+    truncated = EventLog()
+    kept = 0
+    for row in log.rows():
+        if row["kind"] == "preempt" and kept == 0:
+            kept = 1  # silently drop one preemption
+            continue
+        truncated.append(
+            row["t"],
+            EVENT_KINDS.index(row["kind"]),
+            job=row["job"],
+            seconds=row["seconds"],
+        )
+    mism = check_replay(truncated, res, reliability=False)
+    assert any(m.startswith("preemptions") for m in mism)
+
+
+def test_telemetry_changes_nothing():
+    _, res_on = _cached_storm()
+    _, res_off = _storm_sim(telemetry=False)
+    assert dataclasses.asdict(res_off) == dataclasses.asdict(res_on)
+
+
+# ------------------------------------------------------------- metrics
+def test_metrics_series_per_tick():
+    sim, _ = _cached_storm()
+    m = sim.tele.metrics
+    assert len(m) > 0
+    t = m.column("time")
+    assert (np.diff(t) > 0).all()  # strictly increasing tick times
+    util = m.column("utilization")
+    assert (util >= 0.0).all() and (util <= 1.0).all()
+    # per-tick decide deltas sum back to the profiler's total
+    assert np.isclose(
+        m.column("decide_seconds").sum(),
+        sim.tele.prof.total("decide"),
+        rtol=1e-9,
+    )
+    path = "/tmp/test_telemetry_metrics.csv"
+    m.to_csv(path)
+    header = open(path).readline().strip().split(",")
+    assert header == list(m.fields)
+
+
+# ------------------------------------------------------------- perfetto
+def test_chrome_trace_is_valid_and_loadable():
+    sim, _ = _cached_storm()
+    path = "/tmp/test_telemetry_trace.json"
+    n = export_chrome_trace(
+        path,
+        events=sim.tele.events,
+        profiler=sim.tele.prof,
+        cluster_names=[c.id for c in sim.fleet.clusters()],
+        job_ids=sim.tele.meta["job_ids"],
+        end_time=HORIZON,
+    )
+    doc = json.load(open(path))
+    trace = doc["traceEvents"]
+    assert len(trace) == n > 0
+    phases = {e["ph"] for e in trace}
+    assert phases <= {"M", "X"}
+    names = {e["args"]["name"] for e in trace if e["name"] == "process_name"}
+    assert "scheduler" in names
+    assert any(name.startswith("cluster ") for name in names)
+    for e in trace:
+        if e["ph"] != "X":
+            continue
+        assert e["ts"] >= 0.0 and e["dur"] >= 0.0
+        assert isinstance(e["pid"], int) and isinstance(e["tid"], int)
+    # job spans land on cluster tracks (pid >= 1), profiler spans on 0
+    cats = {e.get("cat") for e in trace if e["ph"] == "X"}
+    assert cats == {"job", "decide"}
+    assert all(e["pid"] >= 1 for e in trace if e.get("cat") == "job")
+    assert all(e["pid"] == 0 for e in trace if e.get("cat") == "decide")
+    # decide-pass phases made it into the trace
+    span_names = {e["name"] for e in trace if e.get("cat") == "decide"}
+    assert {"decide", "gather", "apply"} <= span_names
+
+
+# ------------------------------------------------------------- summary
+def test_summary_one_screen_report():
+    _, res = _cached_storm()
+    text = res.summary()
+    assert text.count("\n") < 12  # one screen
+    for token in ("fleet", "mechanisms", "failures", "premium", "basic"):
+        assert token in text, token
+    assert f"completed {res.completed}/{res.total_jobs}" in text
+
+
+def test_event_causes_cover_failure_kinds():
+    # the cause vocabulary must stay a superset of reliability's kinds
+    from repro.scheduler.reliability import FAILURE_KINDS
+    from repro.scheduler.telemetry import CAUSE_CODE
+
+    assert all(k in CAUSE_CODE for k in FAILURE_KINDS)
+
+
+def test_telemetry_bundle_defaults():
+    tele = FleetTelemetry()
+    assert tele.prof.enabled
+    assert len(tele.events) == 0 and len(tele.metrics) == 0
+    assert tele.meta == {}
