@@ -31,7 +31,7 @@ planet-scale acceptance run, with and without the ledger):
 
     PYTHONPATH=src python benchmarks/sched_scale.py \\
         --jobs 20000 --check-equivalence --failure-trace storm \\
-        --json BENCH_sched.json
+        --serving --curves --json BENCH_sched.json
     PYTHONPATH=src python benchmarks/sched_scale.py \\
         --jobs 1000000 --regions 8 --clusters-per-region 8
     PYTHONPATH=src python benchmarks/sched_scale.py \\
@@ -67,6 +67,21 @@ event log whose replay reproduces the run's mechanism aggregates
 exactly.  ``--trace-out`` exports a Perfetto/chrome://tracing JSON of
 that run; ``--events-out`` dumps the raw JSONL event log.
 
+``--curves`` adds the concave-scaling row: the base trace is reshaped
+into arrival waves (load oscillates so spare capacity is repeatedly
+*contested* — on steady traces expansion happens for free at admission
+and both arms rationally take every idle GPU), synthetic concave
+throughput curves are attached (saturation knee at demand, wide
+post-knee slope spread) and the curve-aware water-filling allocator is
+A/B'd against the curve-blind arm (``curve_aware=False`` — the seed's
+linear whole-prefix expansion) at equal capacity.  The run exits
+non-zero unless curve-aware strictly realizes more goodput — nominal
+work delivered (progress x ideal GPU-hours summed over the trace) per
+busy GPU-hour occupied to deliver it — and, with
+``--check-equivalence``, unless all four {JobTable, plain jobs} x
+{vectorized, scalar} combinations replay the same decision digest with
+curves on.
+
 ``--failure-trace storm`` adds a reliability row: a long-job variant of
 the trace (``RELIABILITY_WORK_FACTOR`` x the work per job — node-accurate
 blast radii mean short jobs rarely die mid-run, and periodic
@@ -94,7 +109,10 @@ import sys
 import time
 from typing import Dict, List, Optional
 
+import numpy as np
+
 from repro.scheduler.costs import CostModel
+from repro.scheduler.curves import synth_curve_params
 from repro.scheduler.policy import ElasticPolicy
 from repro.scheduler.reliability import CheckpointCadence, FailureModel, FailureTrace
 from repro.scheduler.serving import ServiceSpec, ServingConfig, TrafficConfig
@@ -131,13 +149,16 @@ def _interarrival(fleet_gpus: int) -> float:
     return BASE_INTERARRIVAL * BASE_FLEET_GPUS / fleet_gpus
 
 
-def _trace(n_jobs: int, fleet_gpus: int, work_factor: float = 1.0):
+def _trace(
+    n_jobs: int, fleet_gpus: int, work_factor: float = 1.0, curves: bool = False
+):
     return synth_workload(
         n_jobs,
         fleet_gpus,
         seed=SEED,
         mean_interarrival=_interarrival(fleet_gpus),
         work_scale=WORK_SCALE * work_factor,
+        curves=curves,
     )
 
 
@@ -630,6 +651,168 @@ def bench_serving(
         )
     return out
 
+# -- curves row -----------------------------------------------------------
+# the concave-scaling row reshapes the base trace into arrival waves:
+# each window's arrivals are compressed into its first
+# CURVES_WAVE_DUTY fraction, so load oscillates every window — the
+# back half of each wave frees capacity by completions while the next
+# wave's backlog was admitted un-expanded, which is the regime where
+# the allocators actually differ (steady traces expand jobs for free
+# at admission, where both arms rationally take every spare GPU)
+CURVES_WAVE_SECONDS = 3 * 3600.0
+CURVES_WAVE_DUTY = 0.5
+# the row's curve family: saturation knee AT demand (every elastic GPU
+# sits on the saturated segment — also exact under the splice-ladder
+# snap) with a wide slope spread, so the water-fill's marginal-utility
+# ordering is what the A/B measures
+CURVES_KNEE_RANGE = (1.0, 1.0)
+CURVES_SAT_RANGE = (0.02, 0.95)
+
+
+def bench_curves(
+    n_jobs: int,
+    regions: int,
+    clusters_per_region: int,
+    gpus_per_cluster: int,
+    check_equivalence: bool,
+) -> Dict:
+    """Concave-scaling row: replay the base trace reshaped into arrival
+    waves with synthetic concave throughput curves attached (saturation
+    knee at demand, post-knee slope spread over ``CURVES_SAT_RANGE``)
+    and A/B the curve-aware water-filling allocator against the
+    curve-blind arm (``curve_aware=False``: the seed's linear
+    whole-prefix expansion) at equal capacity.
+
+    The gate is strict: curve-aware must realize MORE goodput per
+    occupied GPU-hour — nominal work delivered (sum over jobs of
+    progress x ideal GPU-hours; the simulator advances progress over the
+    same curves in both arms) divided by the busy GPU-hours the arm
+    occupied to deliver it.  The linear arm parks GPUs on post-knee
+    tails where a GPU-hour buys only ``sat_slope`` of a nominal one;
+    curve-aware aims spare at slope-1.0 pre-knee chunks first and
+    refuses expansions whose marginal slope cannot pay the
+    CostModel-charged resize downtime, so at equal capacity it delivers
+    the trace's work while occupying strictly fewer GPU-hours (or
+    strictly more work when the backlog is capacity-bound).
+
+    With ``--check-equivalence`` all four {JobTable, plain jobs} x
+    {vectorized, scalar reference} combinations must also replay the
+    same decision digest with curves on (the water-filling pass is the
+    one place the two policy paths diverge structurally, so the flat
+    base-trace digest alone no longer pins it)."""
+
+    def _curved_trace(fleet_gpus: int):
+        jobs = _trace(n_jobs, fleet_gpus)
+        wave, duty = CURVES_WAVE_SECONDS, CURVES_WAVE_DUTY
+        for j in jobs:
+            w = j.arrival // wave
+            j.arrival = w * wave + (j.arrival % wave) * duty
+        crng = np.random.Generator(np.random.Philox(SEED ^ 0xC0FFEE))
+        demands = np.fromiter(
+            (j.demand_gpus for j in jobs), np.int64, len(jobs)
+        )
+        knee, sat = synth_curve_params(
+            crng,
+            demands,
+            knee_range=CURVES_KNEE_RANGE,
+            sat_range=CURVES_SAT_RANGE,
+        )
+        for j, k, s in zip(jobs, knee, sat):
+            j.knee_gpus = int(k)
+            j.sat_slope = float(s)
+        return jobs
+
+    def _run(curve_aware=True, vec=True, jt=True, digest=False):
+        fleet = _fleet(regions, clusters_per_region, gpus_per_cluster)
+        horizon = _horizon(n_jobs, fleet.total())
+        policy = _TimedPolicy(
+            ElasticPolicy(vectorized=vec, curve_aware=curve_aware),
+            digest=digest,
+        )
+        sim = FleetSimulator(
+            fleet,
+            _curved_trace(fleet.total()),
+            policy,
+            SimConfig(
+                horizon_seconds=horizon,
+                cost_model=CostModel(),
+                job_table=jt,
+            ),
+        )
+        res = sim.run()
+        # nominal GPU-hours of useful work delivered: progress advances
+        # over the concave curve, so a GPU parked past a knee inflates
+        # busy_gpu_seconds without showing up here — realized goodput is
+        # this divided by the busy GPU-hours occupied to deliver it
+        work = sum(j.progress * j.gpu_hours for j in sim.jobs.values())
+        busy = sim.busy_gpu_seconds / 3600.0
+        return res, work, work / max(busy, 1e-9), policy
+
+    t0 = time.perf_counter()
+    res_a, work_a, goodput_a, pol_a = _run(digest=check_equivalence)
+    res_l, work_l, goodput_l, _ = _run(curve_aware=False)
+    wall = time.perf_counter() - t0
+    out = {
+        "wall_seconds": wall,
+        "work_gpu_hours_curve_aware": work_a,
+        "work_gpu_hours_linear": work_l,
+        "goodput_per_busy_gpu_hour_curve_aware": goodput_a,
+        "goodput_per_busy_gpu_hour_linear": goodput_l,
+        "goodput_gain": goodput_a - goodput_l,
+        "completed_curve_aware": res_a.completed,
+        "completed_linear": res_l.completed,
+        "utilization_curve_aware": res_a.utilization,
+        "utilization_linear": res_l.utilization,
+        "resizes_curve_aware": res_a.resizes,
+        "resizes_linear": res_l.resizes,
+        "goodput_gate": "ok" if goodput_a > goodput_l else "FAILED",
+        "equivalence": "skipped",
+    }
+    print(
+        f"curves: goodput={goodput_a:.4f} work-gpu-h per busy-gpu-h "
+        f"curve-aware vs {goodput_l:.4f} linear "
+        f"(work {work_a:.0f} vs {work_l:.0f} gpu-h, "
+        f"done={res_a.completed} vs {res_l.completed}, "
+        f"util={res_a.utilization:.3f} vs {res_l.utilization:.3f}, "
+        f"resizes={res_a.resizes} vs {res_l.resizes}) "
+        f"— goodput gate {out['goodput_gate']}"
+    )
+    if out["goodput_gate"] == "FAILED":
+        print(
+            f"CURVES GOODPUT FAILURE: curve-aware allocation realized "
+            f"{goodput_a:.6f} work-gpu-h per busy-gpu-h <= linear's "
+            f"{goodput_l:.6f} on the curved trace",
+            file=sys.stderr,
+        )
+    if check_equivalence:
+        sig = _result_signature(res_a)
+        out["decision_digest"] = pol_a.digest()
+        out["equivalence"] = "ok"
+        for vec, jt in [(True, False), (False, True), (False, False)]:
+            other_res, _, _, other = _run(vec=vec, jt=jt, digest=True)
+            label = (
+                f"{'vectorized' if vec else 'scalar'}+"
+                f"{'table' if jt else 'plain'}"
+            )
+            osig = _result_signature(other_res)
+            if other.digest() != pol_a.digest() or osig != sig:
+                out["equivalence"] = "FAILED"
+                print(
+                    f"CURVES EQUIVALENCE FAILURE: {label} diverged on "
+                    f"the curved trace:\n"
+                    f"  main:  digest={pol_a.digest()} {sig}\n"
+                    f"  other: digest={other.digest()} {osig}",
+                    file=sys.stderr,
+                )
+        if out["equivalence"] == "ok":
+            print(
+                "curves equivalence: all four policy/representation "
+                "combinations replay the water-filling decisions "
+                f"identically (digest {pol_a.digest()[:12]}...)"
+            )
+    return out
+
+
 # the reliability row multiplies per-job work by this much: periodic
 # checkpointing only pays off for jobs long enough to meet a failure,
 # and node-accurate blast radii make the base trace's short jobs
@@ -648,6 +831,7 @@ def bench(
     failure_spec: Optional[str] = None,
     job_table: bool = True,
     serving: bool = False,
+    curves: bool = False,
     trace_out: Optional[str] = None,
     events_out: Optional[str] = None,
 ) -> Dict:
@@ -901,6 +1085,15 @@ def bench(
             check_equivalence,
         )
 
+    if curves:
+        out["curves"] = bench_curves(
+            n_jobs,
+            regions,
+            clusters_per_region,
+            gpus_per_cluster,
+            check_equivalence,
+        )
+
     if failure_spec:
         out["reliability"] = bench_failures(
             n_jobs,
@@ -1120,6 +1313,16 @@ def main(argv: Optional[List[str]] = None) -> int:
         "and the loaning training-throughput gain (docs/serving.md)",
     )
     parser.add_argument(
+        "--curves",
+        action="store_true",
+        help="add the concave-scaling row: replay the trace with "
+        "synthetic concave throughput curves and fail unless the "
+        "curve-aware water-filling allocator strictly beats the "
+        "curve-blind linear arm on realized goodput at equal capacity; "
+        "with --check-equivalence also gates the {table, plain} x "
+        "{vectorized, scalar} decision digests with curves on",
+    )
+    parser.add_argument(
         "--trace-out",
         type=str,
         default=None,
@@ -1159,6 +1362,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         failure_spec=args.failure_trace,
         job_table=not args.no_job_table,
         serving=args.serving,
+        curves=args.curves,
         trace_out=args.trace_out,
         events_out=args.events_out,
     )
@@ -1178,6 +1382,10 @@ def main(argv: Optional[List[str]] = None) -> int:
         bad = [k for k, v in srv["gates"].items() if v != "ok"]
         if bad:
             print(f"SERVING GATES FAILED: {bad}", file=sys.stderr)
+            return 1
+    cur = out.get("curves")
+    if cur is not None:
+        if cur["equivalence"] == "FAILED" or cur["goodput_gate"] == "FAILED":
             return 1
     rel = out.get("reliability")
     if rel is not None:

@@ -24,8 +24,10 @@ Column fields (all shared with the policy's vectorized decide path):
 ``checkpoint_bytes``, ``restore_debt``, ``tier_code``, ``queued_since``,
 ``ever_ran``, ``progress``, ``snap_progress``, ``snap_time``,
 ``done_at`` (NaN = not done), ``downtime_until``, ``downtime_seconds``,
-``gpu_hours``, ``splice_overhead``, ``ideal`` and ``cluster_idx`` (an
-index into the owning fleet's cluster order, -1 = unplaced).  Identity
+``gpu_hours``, ``splice_overhead``, ``knee_gpus``/``sat_slope`` (the
+concave scaling curve, ``scheduler/curves.py``), ``ideal`` and
+``cluster_idx`` (an index into the owning fleet's cluster order, -1 =
+unplaced).  Identity
 (``id``, ``tier``), the SLA account object and the rare event counters
 stay on the instance.
 
@@ -81,6 +83,8 @@ _COLUMNS = (
     ("downtime_seconds", np.float64, 0.0),
     ("gpu_hours", np.float64, 0.0),
     ("splice_overhead", np.float64, 0.0),
+    ("knee_gpus", np.int64, 0),
+    ("sat_slope", np.float64, 1.0),
     ("ideal", np.float64, 0.0),
     ("cluster_idx", np.int64, -1),
     ("sla_slot", np.int64, -1),
@@ -107,6 +111,8 @@ _SCALAR_FIELDS = (
     "downtime_seconds",
     "gpu_hours",
     "splice_overhead",
+    "knee_gpus",
+    "sat_slope",
 )
 
 
@@ -462,6 +468,8 @@ class TableJob(Job):
     min_gpus = _int_col("min_gpus")
     allocated = _int_col("allocated")
     checkpoint_bytes = _int_col("checkpoint_bytes")
+    knee_gpus = _int_col("knee_gpus")
+    sat_slope = _float_col("sat_slope")
     arrival = _float_col("arrival")
     restore_debt = _float_col("restore_debt")
     queued_since = _float_col("queued_since")

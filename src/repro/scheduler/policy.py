@@ -23,9 +23,18 @@ real downtime instead of treating them as free:
   the scheduling interval; otherwise the mechanism would eat the whole
   tick it was meant to exploit.
 - *Expansion gate* — opportunistic scale-up of an already-running job
-  triggers a splice resize; it only happens when the productive
-  GPU-seconds gained in one interval exceed the dead GPU-seconds the
-  resize charges.
+  triggers a splice resize; a chunk of extra GPUs is only granted when
+  the productive GPU-seconds it delivers in one interval — priced on
+  the job's concave scaling curve (``scheduler/curves.py``), not a
+  linear fiction — exceed the dead GPU-seconds the resize charges.
+  Spare capacity is *water-filled* in descending marginal-slope order:
+  pre-knee chunks (marginal gain of one interval per GPU, the seed's
+  linear pricing, and the whole chunk for flat-curve jobs) fill first
+  in scale-up-priority order, then post-knee chunks by descending
+  ``sat_slope``; a job's post-knee chunk is reachable only once its
+  pre-knee chunk filled (concavity).  ``curve_aware=False`` restores
+  linear pricing — the A/B arm ``benchmarks/sched_scale.py --curves``
+  measures against.
 - *Region-aware placement* — a running job that must move is placed in
   its current region when any same-region cluster fits, because the cost
   model prices cross-region migrations at the slower inter-region blob
@@ -168,6 +177,11 @@ class Decision:
     # The simulator commits it in ``_apply``; decisions without one (the
     # static baseline, hand-written policies) get an auto-fit span.
     node_plan: Optional[tuple] = None
+    # ids of jobs whose grant includes a curve-priced (slope-gated)
+    # expansion chunk this interval — the simulator tags their resize
+    # events with the ``slope`` cause.  None when no such grant was made
+    # (all-flat fleets, curve_aware=False).  Sorted for path equality.
+    slope_expanded: Optional[Tuple[str, ...]] = None
 
 
 class StaticGangPolicy:
@@ -306,8 +320,14 @@ class ElasticPolicy:
         aging_rate: Union[float, Mapping[str, float]] = 1.0,
         aging_threshold_intervals: float = 12.0,
         node_batch: bool = True,
+        curve_aware: bool = True,
     ):
         self.expand_factor = expand_factor
+        # price expansion/shrink on each job's concave scaling curve
+        # (curves.py).  False treats every curve as flat — the seed's
+        # linear pricing — while the simulator still *progresses* jobs on
+        # their true curves; the bench's --curves A/B arm flips this
+        self.curve_aware = curve_aware
         # threaded in by FleetSimulator/FleetExecutor when left unset, so
         # the policy always prices decisions with the charged model
         self.cost_model = cost_model
@@ -475,6 +495,8 @@ class ElasticPolicy:
                 debt = table.restore_debt[slots]
                 ran = table.ever_ran[slots]
                 svc = table.service[slots]
+                knee = table.knee_gpus[slots]
+                sat = table.sat_slope[slots]
             else:
                 base = np.array(
                     [
@@ -488,11 +510,13 @@ class ElasticPolicy:
                             _TIER_CODE[j.tier],
                             j.queued_since,
                             j.service,
+                            j.knee_gpus,
+                            j.sat_slope,
                         )
                         for j in active
                     ],
                     dtype=np.float64,
-                ).reshape(n, 9)
+                ).reshape(n, 11)
                 demand = base[:, 0].astype(np.int64)
                 min_g = base[:, 1].astype(np.int64)
                 alloc0 = base[:, 2].astype(np.int64)
@@ -502,12 +526,17 @@ class ElasticPolicy:
                 cb = base[:, 4]
                 debt = base[:, 5]
                 svc = base[:, 8] > 0.5
+                knee = base[:, 9].astype(np.int64)
+                sat = base[:, 10]
                 ran = None  # gathered lazily, when a cost model needs it
         prio = _TIER_PRIO[tcode]
         sup = _TIER_SUP[tcode]
         gfrac = _TIER_GFRAC[tcode]
         running = alloc0 > 0
         guar = gfrac > 0.0
+        # jobs whose scaling curve the policy prices (knee_gpus == 0 is
+        # the flat/linear sentinel; curve_aware=False flattens them all)
+        curved = (knee > 0) & self.curve_aware
 
         # SLA headroom: ONE batched ledger query when the guaranteed jobs
         # carry FleetSLAAccounts-backed accounts (the production setup —
@@ -603,8 +632,13 @@ class ElasticPolicy:
         # 1b. shrink-before-queue: a guaranteed job whose full slice did
         #     not fit but which is comfortably above its hourly guarantee
         #     runs shrunk (>= min_gpus) instead of queueing — if the
-        #     restart it takes costs less downtime than the interval buys
-        cand = (galloc == 0) & (need > 0) & (head > 0.1) & (restart < interval)
+        #     restart it takes costs less downtime than the interval buys.
+        #     Curved jobs price the buy at the shrunk operating point
+        #     (shrunk/demand of a nominal interval — the curve is linear
+        #     below the knee), so a restart a full-size slice would
+        #     justify no longer passes on a small one
+        worth = np.where(curved, interval * (shrunk / demand), interval)
+        cand = (galloc == 0) & (need > 0) & (head > 0.1) & (restart < worth)
         g1b, rem = _greedy_take(
             np.where(cand, demand, 0)[order_a], min_g[order_a], rem, True
         )
@@ -621,31 +655,88 @@ class ElasticPolicy:
         galloc[order_a] += g2
 
         # 3. opportunistic expansion into spare capacity — only with real
-        #    fleet slack, only for jobs admitted this interval, and only
-        #    when the resize it would trigger costs less dead GPU time
-        #    than the extra capacity delivers in one interval.  Serving
-        #    replica groups never expand past their autoscaler target:
-        #    replicas beyond it buy no SLO, only churn
+        #    fleet slack, only for jobs admitted this interval.  Greedy
+        #    marginal-utility water-filling over the scaling curves
+        #    (scheduler/curves.py): a job's headroom up to ``expand_factor
+        #    x demand`` splits at its saturation knee into a pre-knee
+        #    chunk whose marginal GPU earns one full interval (the seed's
+        #    linear pricing — and the WHOLE chunk for flat-curve jobs)
+        #    and a post-knee chunk whose marginal GPU earns only
+        #    ``sat_slope`` of one.  Filling in global descending-slope
+        #    order therefore collapses to two blocks: every pre-knee
+        #    chunk first, in scale-up order, then post-knee chunks by
+        #    descending ``sat_slope`` (ties to scale-up order); a job's
+        #    post-knee chunk is reachable only once its pre-knee chunk
+        #    filled (concavity).  Each chunk is gated on the
+        #    CostModel-charged resize burn.  Serving replica groups never
+        #    expand past their autoscaler target: replicas beyond it buy
+        #    no SLO, only churn
+        nm = fleet.node_map
+        slope_rows = None
         if rem > 0.1 * total:
             extra = (demand * (self.expand_factor - 1.0)).astype(np.int64)
-            gain = extra.astype(np.float64) * interval
-            burn = resize_s * (galloc + extra).astype(np.float64)
-            free_event = ~running | (galloc != alloc0)
-            gate = (cm is None) | free_event | (burn < gain)
-            cand3 = (galloc > 0) & (extra > 0) & gate & ~svc
+            target = galloc + extra
+            end_a = np.where(curved, np.clip(knee, galloc, target), target)
+            if nm is not None:
+                # splice ladder: a curved chunk boundary must be a world
+                # size gang rounding keeps — a multiple of demand (the
+                # boundary sits at/above demand whenever it exceeds
+                # galloc) — or pass 3b would round a knee-capped grant
+                # back down.  Post-boundary capacity is then priced at
+                # sat_slope: conservative when the snap moved the
+                # boundary below the true knee
+                end_a = np.where(
+                    curved,
+                    np.maximum(end_a - end_a % demand, galloc),
+                    end_a,
+                )
+            d_a = end_a - galloc
+            d_b = target - end_a
+            slope_b = sat * interval
+            if cm is None:
+                gate_a = np.ones(n, dtype=bool)
+                gate_b = gate_a
+            else:
+                free_event = ~running | (galloc != alloc0)
+                gain_a = d_a.astype(np.float64) * interval
+                burn_a = resize_s * (galloc + d_a).astype(np.float64)
+                gate_a = free_event | (burn_a < gain_a)
+                # past the knee, a job whose pre-knee chunk already paid
+                # for the resize only needs the marginal GPU to out-earn
+                # its own burn; a job sitting AT its knee pays the fixed
+                # burn against the flat-slope gain instead
+                burn_b = resize_s * (galloc + d_b).astype(np.float64)
+                gate_b = np.where(
+                    d_a > 0,
+                    gate_a & (free_event | (slope_b > resize_s)),
+                    free_event | (burn_b < slope_b * d_b.astype(np.float64)),
+                )
+            cand_a = (galloc > 0) & (d_a > 0) & gate_a & ~svc
+            cand_b = (galloc > 0) & (d_b > 0) & gate_b & ~svc
             order_s = np.lexsort((idx, sup))
+            ones = np.ones(n, dtype=np.int64)
             g3, rem = _greedy_take(
-                np.where(cand3, extra, 0)[order_s],
-                np.ones(n, dtype=np.int64)[order_s],
-                rem,
-                True,
+                np.where(cand_a, d_a, 0)[order_s], ones[order_s], rem, True
             )
-            galloc[order_s] += g3
+            grant_a = np.zeros(n, dtype=np.int64)
+            grant_a[order_s] = g3
+            galloc += grant_a
+            grant_b = np.zeros(n, dtype=np.int64)
+            if rem > 0 and cand_b.any():
+                # concavity: the cheap chunk must fill before the dear one
+                cand_b &= (d_a == 0) | (grant_a == d_a)
+                order_b = np.lexsort((idx, sup, -slope_b))
+                g3b, rem = _greedy_take(
+                    np.where(cand_b, d_b, 0)[order_b], ones[order_b], rem, True
+                )
+                grant_b[order_b] = g3b
+                galloc += grant_b
+            if curved.any():
+                slope_rows = np.flatnonzero(curved & (grant_a + grant_b > 0))
 
         # 3b. gang/splice rounding (node-granular fleets): a grant must be
         #     a world size the splice mechanism supports — a divisor or
         #     multiple of demand — before placement shapes it onto nodes
-        nm = fleet.node_map
         if nm is not None:
             galloc = gang_down_vec(galloc, demand)
             _gang_topup(galloc, demand, prio, int(total - galloc.sum()))
@@ -665,6 +756,14 @@ class ElasticPolicy:
         clusters = fleet.clusters()
         if table is not None:
             ids = table.ids[slots]
+        else:
+            ids = [j.id for j in active]
+        slope_expanded = (
+            tuple(sorted(ids[i] for i in slope_rows))
+            if slope_rows is not None and slope_rows.size
+            else None
+        )
+        if table is not None:
             cluster_ids = [c.id for c in clusters]
             return Decision(
                 alloc=_TableAlloc(ids, galloc, placed, cluster_ids),
@@ -676,8 +775,8 @@ class ElasticPolicy:
                     else None
                 ),
                 node_plan=node_plan,
+                slope_expanded=slope_expanded,
             )
-        ids = [j.id for j in active]
         final: Dict[str, Tuple[int, Optional[str]]] = {}
         for i in range(n):
             cid = clusters[placed[i]].id if placed[i] >= 0 else None
@@ -687,6 +786,7 @@ class ElasticPolicy:
             preemptions=sorted(ids[i] for i in np.flatnonzero(preempt)),
             migrations=sorted(ids[i] for i in np.flatnonzero(migrate)),
             node_plan=node_plan,
+            slope_expanded=slope_expanded,
         )
 
     def _place_vectorized(
@@ -1394,14 +1494,21 @@ class ElasticPolicy:
                 galloc[i] = need[i]
                 used += need[i]
 
-        # 1b. shrink-before-queue (restart-cost gated)
+        # 1b. shrink-before-queue (restart-cost gated; curved jobs price
+        #     the interval's buy at the shrunk operating point, like the
+        #     vectorized pass)
         for i in order_a:
             if galloc[i] > 0 or need[i] == 0:
                 continue
-            if head[i] <= 0.1 or restart[i] >= interval:
+            j = active[i]
+            if self.curve_aware and j.knee_gpus > 0:
+                worth = interval * (need[i] / j.demand_gpus)
+            else:
+                worth = interval
+            if head[i] <= 0.1 or restart[i] >= worth:
                 continue
-            give = min(active[i].demand_gpus, total - used)
-            if give >= active[i].min_gpus:
+            give = min(j.demand_gpus, total - used)
+            if give >= j.min_gpus:
                 galloc[i] = give
                 used += give
 
@@ -1416,35 +1523,88 @@ class ElasticPolicy:
                 galloc[i] += give
                 used += give
 
-        # 3. gated opportunistic expansion
+        # 3. slope-gated opportunistic expansion: the scalar mirror of the
+        #    vectorized water-filling pass (see _decide_vectorized pass 3
+        #    for the chunking/pricing rationale)
+        nm = fleet.node_map
+        slope_ids: set = set()
         if total - used > 0.1 * total:
             cm = self.cost_model
+            chunks = []  # (d_a, d_b, slope_b, gate_a, gate_b, is_curved)
+            for i in range(n):
+                j = active[i]
+                extra = int(j.demand_gpus * (self.expand_factor - 1))
+                target = galloc[i] + extra
+                is_curved = self.curve_aware and j.knee_gpus > 0
+                if is_curved:
+                    end_a = min(max(j.knee_gpus, galloc[i]), target)
+                    if nm is not None:
+                        end_a = max(end_a - end_a % j.demand_gpus, galloc[i])
+                else:
+                    end_a = target
+                d_a = end_a - galloc[i]
+                d_b = target - end_a
+                slope_b = j.sat_slope * interval
+                if cm is None:
+                    gate_a = gate_b = True
+                else:
+                    free = not running[i] or galloc[i] != j.allocated
+                    rs = cm.resize_seconds(j.checkpoint_bytes)
+                    gate_a = (
+                        free or rs * float(galloc[i] + d_a) < float(d_a) * interval
+                    )
+                    if d_a > 0:
+                        gate_b = gate_a and (free or slope_b > rs)
+                    else:
+                        gate_b = (
+                            free
+                            or rs * float(galloc[i] + d_b) < slope_b * float(d_b)
+                        )
+                chunks.append((d_a, d_b, slope_b, gate_a, gate_b, is_curved))
             order_s = sorted(
                 range(n),
                 key=lambda i: (TIERS[active[i].tier].scaleup_priority, i),
             )
+            grant_a = [0] * n
+            grant_b = [0] * n
             for i in order_s:
-                if galloc[i] == 0:
-                    continue
-                if active[i].service:
+                d_a, _, _, gate_a, _, _ = chunks[i]
+                if galloc[i] == 0 or active[i].service:
                     continue  # serving never expands past its target
-                extra = int(active[i].demand_gpus * (self.expand_factor - 1))
-                if extra <= 0:
+                if d_a <= 0 or not gate_a:
                     continue
-                if cm is not None and running[i] and galloc[i] == active[i].allocated:
-                    burn = cm.resize_seconds(active[i].checkpoint_bytes) * float(
-                        galloc[i] + extra
-                    )
-                    if not burn < float(extra) * interval:
-                        continue
-                give = min(extra, total - used)
+                give = min(d_a, total - used)
                 if give > 0:
+                    grant_a[i] = give
                     galloc[i] += give
                     used += give
+            order_b = sorted(
+                range(n),
+                key=lambda i: (
+                    -chunks[i][2],
+                    TIERS[active[i].tier].scaleup_priority,
+                    i,
+                ),
+            )
+            for i in order_b:
+                d_a, d_b, _, _, gate_b, _ = chunks[i]
+                if galloc[i] - grant_a[i] == 0 or active[i].service:
+                    continue
+                if d_b <= 0 or not gate_b:
+                    continue
+                if d_a > 0 and grant_a[i] != d_a:
+                    continue  # concavity: cheap chunk fills first
+                give = min(d_b, total - used)
+                if give > 0:
+                    grant_b[i] = give
+                    galloc[i] += give
+                    used += give
+            for i in range(n):
+                if chunks[i][5] and grant_a[i] + grant_b[i] > 0:
+                    slope_ids.add(active[i].id)
 
         # 3b. gang/splice rounding + ladder top-up, same point and same
         #     routine as the vectorized path
-        nm = fleet.node_map
         if nm is not None:
             for i in range(n):
                 galloc[i] = gang_down(galloc[i], active[i].demand_gpus)
@@ -1470,8 +1630,11 @@ class ElasticPolicy:
         # 5. placement (node-granular when the fleet carries a NodeMap:
         # the reference path derives the same inputs per job in Python
         # and runs the same placement core, so span plans cannot drift)
+        slope_expanded = tuple(sorted(slope_ids)) if slope_ids else None
         if nm is not None:
-            return self._place_reference_nodes(active, fleet, nm, galloc, preempted)
+            return self._place_reference_nodes(
+                active, fleet, nm, galloc, preempted, slope_expanded
+            )
         clusters = fleet.clusters()
         free = {c.id: c.capacity() for c in clusters}
         cdrain = {c.id: c.draining for c in clusters}
@@ -1539,6 +1702,7 @@ class ElasticPolicy:
             alloc=final,
             preemptions=sorted(active[i].id for i in preempted),
             migrations=sorted(active[i].id for i in migrations),
+            slope_expanded=slope_expanded,
         )
 
     def _place_reference_nodes(
@@ -1548,6 +1712,7 @@ class ElasticPolicy:
         nm,
         galloc: List[int],
         preempted: set,
+        slope_expanded: Optional[Tuple[str, ...]] = None,
     ) -> Decision:
         """Reference-path entry to node placement: gather the per-job
         state as the scalar loops see it, then run the shared placement
@@ -1601,4 +1766,5 @@ class ElasticPolicy:
             preemptions=sorted(active[i].id for i in np.flatnonzero(preempt)),
             migrations=sorted(active[i].id for i in np.flatnonzero(migrate)),
             node_plan=node_plan,
+            slope_expanded=slope_expanded,
         )

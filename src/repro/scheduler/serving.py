@@ -154,6 +154,11 @@ class TrafficTrace:
                 mult = np.maximum(mult, 1.0 + (amp - 1.0) * shape)
             qps[s] = curve * mult
         self.qps = qps
+        # the horizon the caller asked to cover; windows must START at or
+        # before it (the +2-sample padding past it exists only so the
+        # final in-simulation window has samples to read, not to serve
+        # queries of its own)
+        self.horizon_seconds = float(horizon_seconds)
         # last instant the trace covers; queries beyond it are errors,
         # not a silent flat replay of the final sample
         self.end_seconds = float((n - 1) * self.sample_seconds)
@@ -176,10 +181,19 @@ class TrafficTrace:
 
     def window_peak(self, t0: float, t1: float) -> np.ndarray:
         """Per-service max qps over samples in ``[t0, t1]``.  The window
-        START must lie inside the trace; ``t1`` may overhang the end by
-        part of one scheduler tick (the final in-simulation window), in
-        which case the peak covers the samples that exist."""
-        self._check_start(t0, "window starts at")
+        START must lie inside the simulated horizon — a start in the
+        trailing sample padding (or beyond) raises like ``at`` does,
+        instead of silently reading padding samples.  ``t1`` may overhang
+        the trace end by part of one scheduler tick (the final
+        in-simulation window: with ``t0 <= horizon`` the overhang is
+        bounded by ``tick - sample``), in which case the peak covers the
+        samples that exist."""
+        if t0 > self.horizon_seconds:
+            raise ValueError(
+                f"traffic trace covers {self.horizon_seconds:.0f}s but "
+                f"window starts at t={t0:.0f}s — build the trace with a "
+                "horizon covering the simulation"
+            )
         i0 = max(0, int(t0 / self.sample_seconds))
         i1 = min(int(math.ceil(t1 / self.sample_seconds)), self.qps.shape[1] - 1)
         return self.qps[:, i0 : i1 + 1].max(axis=1)

@@ -57,6 +57,7 @@ import numpy as np
 
 from repro.core.sla import TIERS, FleetSLAAccounts, FleetSlotAccount, GpuFractionAccount
 from repro.scheduler.costs import CostModel, RegionTopology, defrag_worthwhile
+from repro.scheduler.curves import synth_curve_params
 from repro.scheduler.job_table import TIER_CODE, JobTable, JobView, TableJob
 from repro.scheduler.node_map import NodeMap, floor_gang
 from repro.scheduler.policy import Decision
@@ -68,6 +69,7 @@ from repro.scheduler.telemetry import (
     C_NONE,
     C_POLICY,
     C_PREEMPT,
+    C_SLOPE,
     CAUSE_CODE,
     E_ADMIT,
     E_COMPLETE,
@@ -303,12 +305,19 @@ def synth_workload(
     seed: int = 0,
     mean_interarrival: float = 600.0,
     work_scale: float = 1.0,
+    curves: bool = False,
 ) -> List[Job]:
     """Synthetic trace: mixed tiers/sizes, load ~ fleet capacity.
 
     ``work_scale`` shortens/lengthens jobs without changing the arrival
     process or size mix (used by the scale benchmark to hold fleet load
     near saturation for dense traces).
+
+    ``curves=True`` additionally draws a concave scaling curve per job
+    (``curves.synth_curve_params``: a saturation knee in [demand, 2
+    demand] and a shallow post-knee slope) from a SEPARATE seeded
+    stream, so the base trace — arrivals, sizes, tiers, splice floors —
+    stays byte-identical to ``curves=False``.
     """
     rng = np.random.Generator(np.random.Philox(seed))
     jobs = []
@@ -331,6 +340,13 @@ def synth_workload(
                 min_gpus=max(1, demand // max_splice),
             )
         )
+    if curves and jobs:
+        crng = np.random.Generator(np.random.Philox(seed ^ 0xC0FFEE))
+        demands = np.fromiter((j.demand_gpus for j in jobs), np.int64, len(jobs))
+        knee, sat = synth_curve_params(crng, demands)
+        for j, k, s in zip(jobs, knee, sat):
+            j.knee_gpus = int(k)
+            j.sat_slope = float(s)
     return jobs
 
 
@@ -467,6 +483,9 @@ class FleetSimulator:
         self._lost_by_tier = {t: 0.0 for t in TIERS}
         self._cluster_by_id = {c.id: c for c in fleet.clusters()}
         self._index = {j.id: i for i, j in enumerate(self._jobs_list)}
+        # ids the current decision's water-filling pass slope-expanded
+        # (refreshed by _apply; resize events on them carry cause=slope)
+        self._slope_expanded: frozenset = frozenset()
         # ---- reliability: failure schedule + checkpoint cadence ----------
         self.failure_events = 0
         self.job_failures = 0
@@ -770,6 +789,13 @@ class FleetSimulator:
         few column writes.  Foreign or hand-built decisions walk the
         mapping per job as before."""
         tu = decision.table_update
+        # resize events on these jobs this tick were granted by the
+        # curve-priced water-filling pass; tag their cause accordingly
+        self._slope_expanded = (
+            frozenset(decision.slope_expanded)
+            if decision.slope_expanded
+            else frozenset()
+        )
         fast = tu is not None and self._table is not None and tu[0] is self._table
         if fast:
             self._apply_table(tu[1], tu[2], tu[3])
@@ -1160,6 +1186,9 @@ class FleetSimulator:
                     job=self._index[j.id],
                     cluster=self._cluster_idx.get(j.cluster, -1),
                     tier=TIER_CODE[j.tier],
+                    cause=(
+                        C_SLOPE if j.id in self._slope_expanded else C_NONE
+                    ),
                     gpus=gpus,
                     seconds=charged,
                 )
@@ -1423,6 +1452,8 @@ class FleetSimulator:
             self._demand = t.demand_gpus
             self._ideal = t.ideal
             self._ovh = t.splice_overhead
+            self._knee = t.knee_gpus
+            self._sat = t.sat_slope
             self._guar = _TIER_GFRAC[t.tier_code[:n]] > 0
             self._progress = t.progress
             self._alloc = t.allocated
@@ -1432,6 +1463,8 @@ class FleetSimulator:
             self._demand = np.array([float(j.demand_gpus) for j in jobs])
             self._ideal = np.array([j.ideal_seconds for j in jobs])
             self._ovh = np.array([j.splice_overhead for j in jobs])
+            self._knee = np.array([j.knee_gpus for j in jobs], np.int64)
+            self._sat = np.array([j.sat_slope for j in jobs])
             self._guar = np.array([TIERS[j.tier].gpu_fraction > 0 for j in jobs])
             self._progress = np.zeros(n)
             self._alloc = np.zeros(n)
@@ -1469,6 +1502,19 @@ class FleetSimulator:
         eff = t1 - cut  # productive seconds
         dead = cut - t0  # charged-downtime seconds
         share = np.minimum(alloc / self._demand[act], 2.0)
+        # concave scaling curves (curves.scaling_eff, vector form): past
+        # a job's saturation knee the marginal GPU only buys sat_slope
+        # of a linear one; knee == 0 is the flat sentinel (seed model)
+        k = self._knee[act]
+        gf = np.minimum(alloc, 2.0 * self._demand[act])
+        over = (k > 0) & (gf > k)
+        if over.any():
+            d = self._demand[act]
+            share = np.where(
+                over,
+                np.minimum((k + self._sat[act] * (gf - k)) / d, 2.0),
+                share,
+            )
         share = np.where(
             alloc < self._demand[act], share * (1.0 - self._ovh[act]), share
         )

@@ -85,8 +85,11 @@ E_RECLAIM = KIND_CODE["reclaim"]
 E_COMPLETE = KIND_CODE["complete"]
 
 # Cause vocabulary: scheduler-side causes first, then the reliability
-# failure kinds (single source: reliability.FAILURE_KINDS), then serving.
-EVENT_CAUSES = ("", "policy", "preempt") + FAILURE_KINDS + ("spike",)
+# failure kinds (single source: reliability.FAILURE_KINDS), then serving,
+# then curve pricing ("slope": a resize granted by the water-filling
+# expansion pass on a curved job — appended last so existing codes in
+# exported traces stay stable).
+EVENT_CAUSES = ("", "policy", "preempt") + FAILURE_KINDS + ("spike", "slope")
 CAUSE_CODE = {name: i for i, name in enumerate(EVENT_CAUSES)}
 
 C_NONE = CAUSE_CODE[""]
@@ -95,6 +98,7 @@ C_PREEMPT = CAUSE_CODE["preempt"]
 C_FAILURE = CAUSE_CODE["failure"]
 C_DRAIN = CAUSE_CODE["drain"]
 C_SPIKE = CAUSE_CODE["spike"]
+C_SLOPE = CAUSE_CODE["slope"]
 
 # flags bits
 F_CROSS_REGION = 1

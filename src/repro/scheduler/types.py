@@ -6,6 +6,7 @@ from typing import TYPE_CHECKING, List, Optional
 
 from repro.core.sla import TIERS, FleetSLAAccounts, GpuFractionAccount, SLAAccount
 from repro.scheduler.costs import RegionTopology, default_checkpoint_bytes
+from repro.scheduler.curves import scaling_eff, validate_curve
 
 if TYPE_CHECKING:  # avoid the import cycle: job_table/node_map view Job
     from repro.scheduler.job_table import JobTable
@@ -143,6 +144,12 @@ class Job:
     min_gpus: int = 1
     splice_overhead: float = 0.03  # Fig-4 measured time-slicing overhead
     checkpoint_bytes: int = 0  # deduped snapshot size (Table 4); 0 = estimate
+    # concave scaling curve (scheduler/curves.py): efficiency rises at
+    # slope 1/demand up to the saturation knee, then at sat_slope/demand
+    # to the 2x cap.  knee_gpus == 0 is the flat sentinel — the seed's
+    # linear model exactly, so pre-curve traces stay byte-identical.
+    knee_gpus: int = 0
+    sat_slope: float = 1.0
     # latency-SLO serving replica group (scheduler/serving.py): demand is
     # retargeted every tick by the autoscaler and the policy must never
     # expand it past demand (replicas beyond the target buy no SLO)
@@ -179,19 +186,37 @@ class Job:
     # a durable snapshot exists at progress ``snap_progress`` taken at wall
     # time ``snap_time``; an unplanned failure rolls progress back to it.
     snap_progress: float = 0.0
-    snap_time: float = 0.0
+    # None = "no snapshot recorded yet": __post_init__ fills the arrival
+    # (initial state is restartable).  A sentinel, not a <= 0 clamp, so a
+    # replayed/restored job with a legitimate snapshot AT t=0 keeps it.
+    snap_time: Optional[float] = None
     failures: int = 0  # unplanned failures that killed this job's domain
     failed_at: Optional[float] = None  # pending failure awaiting restart
 
     def __post_init__(self):
         assert self.tier in TIERS
+        if self.demand_gpus < 1:
+            raise ValueError(
+                f"job {self.id}: demand_gpus must be >= 1, got "
+                f"{self.demand_gpus} (ideal_seconds divides by it)"
+            )
+        if not 1 <= self.min_gpus <= self.demand_gpus:
+            raise ValueError(
+                f"job {self.id}: min_gpus must satisfy 1 <= min_gpus <= "
+                f"demand_gpus, got min_gpus={self.min_gpus} with "
+                f"demand_gpus={self.demand_gpus}"
+            )
+        try:
+            validate_curve(self.demand_gpus, self.knee_gpus, self.sat_slope)
+        except ValueError as e:
+            raise ValueError(f"job {self.id}: {e}") from None
         if self.account is None:
             self.account = GpuFractionAccount(self.tier, self.demand_gpus)
         if self.queued_since < 0.0:
             self.queued_since = self.arrival
         if self.checkpoint_bytes <= 0:
             self.checkpoint_bytes = default_checkpoint_bytes(self.demand_gpus)
-        if self.snap_time <= 0.0:
+        if self.snap_time is None:
             self.snap_time = self.arrival  # initial state = restartable
 
     @property
@@ -200,10 +225,15 @@ class Job:
 
     def rate(self) -> float:
         """Progress per second given current allocation (work-conserving
-        elasticity; scaled-down jobs pay the splicing overhead)."""
+        elasticity; scaled-down jobs pay the splicing overhead).  Above
+        the saturation knee the marginal GPU buys only ``sat_slope`` of
+        a linear GPU (scheduler/curves.py); the flat sentinel
+        ``knee_gpus == 0`` keeps the seed's linear model."""
         if self.allocated <= 0 or self.done_at is not None:
             return 0.0
-        eff = min(self.allocated / self.demand_gpus, 2.0)
+        eff = scaling_eff(
+            self.allocated, self.demand_gpus, self.knee_gpus, self.sat_slope
+        )
         if self.allocated < self.demand_gpus:
             eff *= 1.0 - self.splice_overhead
         return eff / self.ideal_seconds

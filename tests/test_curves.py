@@ -1,0 +1,236 @@
+"""Concave scaling curves: the family, fitting, Job plumbing, validation.
+
+Covers the curve math itself (``scheduler/curves.py``), the derivation
+helpers fed by the roofline/hillclimb step-time estimates, the Job /
+JobTable columns the policy and simulator consume, and the construction
+validation regressions that rode along (min_gpus bounds, the
+``snap_time == 0.0`` sentinel fix).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.scheduler.curves import (
+    MAX_SCALE,
+    curve_from_step_seconds,
+    fit_knee,
+    scaling_eff,
+    scaling_eff_vec,
+    synth_curve_params,
+    validate_curve,
+)
+from repro.scheduler.job_table import JobTable
+from repro.scheduler.simulator import synth_workload
+from repro.scheduler.types import Job
+
+
+def test_flat_sentinel_is_the_seed_linear_model():
+    for d in (1, 8, 64):
+        for g in range(0, 3 * d + 1):
+            assert scaling_eff(g, d) == min(g / d, MAX_SCALE)
+            assert scaling_eff(g, d, knee=0, sat_slope=0.3) == min(g / d, MAX_SCALE)
+
+
+def test_curve_linear_below_knee_and_sloped_above():
+    d, knee, sat = 64, 96, 0.25
+    # below (and at) the knee: identical to linear
+    for g in (1, 32, 64, 96):
+        assert scaling_eff(g, d, knee, sat) == min(g / d, MAX_SCALE)
+    # above the knee: marginal GPU buys sat/d, continuous at the knee
+    assert scaling_eff(97, d, knee, sat) == pytest.approx((96 + 0.25) / 64)
+    assert scaling_eff(128, d, knee, sat) == pytest.approx((96 + 0.25 * 32) / 64)
+    # capped at the 2x fleet limit no matter the slope
+    assert scaling_eff(10_000, d, knee=64, sat_slope=1.0) == MAX_SCALE
+    # concave: marginal gains never increase
+    gains = [
+        scaling_eff(g + 1, d, knee, sat) - scaling_eff(g, d, knee, sat)
+        for g in range(1, 2 * d + 4)
+    ]
+    for earlier, later in zip(gains, gains[1:]):
+        assert later <= earlier + 1e-12
+
+
+def test_vector_form_matches_scalar():
+    rng = np.random.Generator(np.random.Philox(3))
+    d = 2 ** rng.integers(0, 8, 200)
+    knee = np.where(
+        rng.integers(0, 2, 200) > 0, rng.integers(1, 3, 200) * d, 0
+    ).astype(np.int64)
+    knee = np.minimum(knee, 2 * d)
+    sat = rng.uniform(0.0, 1.0, 200)
+    g = rng.integers(0, 4 * d.max(), 200)
+    vec = scaling_eff_vec(g, d, knee, sat)
+    for i in range(200):
+        assert vec[i] == scaling_eff(int(g[i]), int(d[i]), int(knee[i]), sat[i])
+
+
+def test_validate_curve_rejects_non_members():
+    validate_curve(64, 0, 1.0)  # flat sentinel
+    validate_curve(64, 64, 0.0)  # hard saturation at demand
+    validate_curve(64, 128, 0.5)
+    with pytest.raises(ValueError):
+        validate_curve(64, -1, 0.5)
+    with pytest.raises(ValueError):
+        validate_curve(64, 32, 0.5)  # knee below demand: nominal unreachable
+    with pytest.raises(ValueError):
+        validate_curve(64, 96, 1.5)
+    with pytest.raises(ValueError):
+        validate_curve(64, 96, -0.1)
+
+
+def test_fit_knee_recovers_a_planted_curve():
+    d, knee, sat = 64, 96, 0.3
+    worlds = [16, 32, 64, 80, 96, 112, 128]
+    thr = [scaling_eff(w, d, knee, sat) for w in worlds]
+    k, s = fit_knee(worlds, thr, d)
+    assert k == knee
+    assert s == pytest.approx(sat, abs=1e-6)
+    validate_curve(d, k, s)
+
+
+def test_fit_knee_degenerates_to_flat_on_linear_samples():
+    d = 64
+    worlds = [32, 64, 96, 128]
+    thr = [w / d for w in worlds]
+    assert fit_knee(worlds, thr, d) == (0, 1.0)
+    # too few samples above demand: flat, not a fabricated knee
+    assert fit_knee([32, 64], [0.5, 1.0], d) == (0, 1.0)
+
+
+def test_curve_from_step_seconds_matches_roofline_convention():
+    # step time rises sub-linearly past the knee: throughput ~ 1/step
+    d, knee, sat = 64, 96, 0.4
+    steps = {
+        w: 1.0 / scaling_eff(w, d, knee, sat) for w in (32, 64, 96, 112, 128)
+    }
+    k, s = curve_from_step_seconds(steps, d)
+    assert k == knee
+    assert s == pytest.approx(sat, abs=1e-6)
+    with pytest.raises(ValueError):
+        curve_from_step_seconds({64: 0.0}, d)
+
+
+def test_synth_curve_params_stay_in_family():
+    rng = np.random.Generator(np.random.Philox(11))
+    demand = 2 ** rng.integers(3, 9, 500)
+    knee, sat = synth_curve_params(rng, demand)
+    for d, k, s in zip(demand, knee, sat):
+        validate_curve(int(d), int(k), float(s))
+        assert d <= k <= 2 * d
+
+
+def _job(**kw):
+    base = dict(id="j", tier="standard", demand_gpus=64, gpu_hours=64.0, arrival=0.0)
+    base.update(kw)
+    return Job(**base)
+
+
+def test_job_rate_consumes_the_curve():
+    flat = _job()
+    curved = _job(knee_gpus=96, sat_slope=0.25)
+    for alloc in (16, 64, 96):
+        flat.allocated = curved.allocated = alloc
+        assert curved.rate() == flat.rate()  # identical below the knee
+    flat.allocated = curved.allocated = 128
+    assert flat.rate() == pytest.approx(2.0 / flat.ideal_seconds)
+    assert curved.rate() == pytest.approx(
+        ((96 + 0.25 * 32) / 64) / curved.ideal_seconds
+    )
+    assert curved.rate() < flat.rate()
+    # splice overhead still applies below demand only
+    flat.allocated = curved.allocated = 32
+    assert curved.rate() == pytest.approx(
+        (32 / 64) * (1.0 - curved.splice_overhead) / curved.ideal_seconds
+    )
+
+
+def test_job_construction_rejects_bad_curves_with_job_id():
+    with pytest.raises(ValueError, match="job j:.*knee"):
+        _job(knee_gpus=32)
+    with pytest.raises(ValueError, match="job j:.*sat_slope"):
+        _job(knee_gpus=96, sat_slope=2.0)
+
+
+def test_job_construction_validates_min_gpus_bounds():
+    _job(min_gpus=1)
+    _job(min_gpus=64)
+    with pytest.raises(ValueError, match="min_gpus"):
+        _job(min_gpus=0)
+    with pytest.raises(ValueError, match="min_gpus"):
+        _job(min_gpus=-4)
+    with pytest.raises(ValueError, match="min_gpus"):
+        _job(min_gpus=65)
+    with pytest.raises(ValueError, match="demand_gpus"):
+        _job(demand_gpus=0, min_gpus=1)
+
+
+def test_snap_time_zero_survives_construction():
+    """A restored/replayed job with a legitimate snapshot AT t=0 must keep
+    it — the old ``<= 0`` clamp overwrote it with the arrival."""
+    j = _job(arrival=500.0, snap_time=0.0, snap_progress=0.25)
+    assert j.snap_time == 0.0
+    assert j.snap_progress == 0.25
+    # the sentinel default still fills the arrival (initial restartable)
+    assert _job(arrival=500.0).snap_time == 500.0
+
+
+def test_job_table_round_trips_curve_columns():
+    t = JobTable(capacity=4)
+    j = _job(knee_gpus=96, sat_slope=0.25)
+    t.adopt(j)
+    assert j.knee_gpus == 96
+    assert j.sat_slope == 0.25
+    j.allocated = 128
+    curved_rate = j.rate()  # rate() reads the columns through TableJob
+    assert curved_rate == pytest.approx(((96 + 0.25 * 32) / 64) / j.ideal_seconds)
+    t.detach(j)
+    assert j.knee_gpus == 96
+    assert j.sat_slope == 0.25
+    assert j.rate() == curved_rate
+
+
+def test_synth_workload_curves_leave_base_trace_untouched():
+    plain = synth_workload(200, 4096, seed=7)
+    curved = synth_workload(200, 4096, seed=7, curves=True)
+    assert all(j.knee_gpus == 0 and j.sat_slope == 1.0 for j in plain)
+    n_curved = 0
+    for a, b in zip(plain, curved):
+        # arrivals/sizes/tiers/floors byte-identical: the curve draw uses
+        # a separate stream
+        assert (a.id, a.tier, a.demand_gpus, a.gpu_hours, a.arrival, a.min_gpus) == (
+            b.id,
+            b.tier,
+            b.demand_gpus,
+            b.gpu_hours,
+            b.arrival,
+            b.min_gpus,
+        )
+        validate_curve(b.demand_gpus, b.knee_gpus, b.sat_slope)
+        assert b.demand_gpus <= b.knee_gpus <= 2 * b.demand_gpus
+        if b.knee_gpus < 2 * b.demand_gpus or b.sat_slope < 1.0:
+            n_curved += 1
+    assert n_curved > 150  # the draw actually produces concave curves
+    # and the draw itself is deterministic
+    again = synth_workload(200, 4096, seed=7, curves=True)
+    assert all(
+        (a.knee_gpus, a.sat_slope) == (b.knee_gpus, b.sat_slope)
+        for a, b in zip(curved, again)
+    )
+
+
+def test_curve_roundtrip_through_fit_is_stable():
+    """Fitting samples generated from a fitted curve returns the same
+    curve (idempotence of the derivation pipeline)."""
+    d = 64
+    worlds = [32, 64, 96, 128]
+    rng = np.random.Generator(np.random.Philox(5))
+    thr = [
+        scaling_eff(w, d, 96, 0.2) * float(rng.uniform(0.995, 1.005))
+        for w in worlds
+    ]
+    k1, s1 = fit_knee(worlds, thr, d)
+    model = [scaling_eff(w, d, k1, s1) for w in worlds]
+    k2, s2 = fit_knee(worlds, model, d)
+    assert (k1, s1) == (k2, pytest.approx(s2))
+    assert math.isfinite(s2)

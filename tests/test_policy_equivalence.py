@@ -49,6 +49,15 @@ def _random_jobs(rng: np.random.Generator, fleet: Fleet, n: int, now: float):
             gpu_hours=float(rng.uniform(0.1, 4.0)) * demand,
             arrival=float(rng.uniform(0.0, now * 1.5)),
             min_gpus=max(1, demand // int(2 ** rng.integers(0, 3))),
+            # half the jobs carry a concave scaling curve so the
+            # water-filling expansion blocks are exercised, half keep the
+            # flat sentinel so the legacy pricing stays covered
+            knee_gpus=(
+                int(rng.integers(demand, 2 * demand + 1))
+                if rng.integers(0, 2)
+                else 0
+            ),
+            sat_slope=float(rng.uniform(0.0, 1.0)),
         )
         state = rng.integers(0, 4)
         if state == 1:  # running somewhere, with delivered history
@@ -98,6 +107,7 @@ def test_vectorized_decide_equals_scalar_reference(seed, n_jobs):
     assert d_vec.alloc == d_ref.alloc
     assert d_vec.preemptions == d_ref.preemptions
     assert d_vec.migrations == d_ref.migrations
+    assert d_vec.slope_expanded == d_ref.slope_expanded
 
 
 def test_full_simulation_identical_under_both_policy_paths():

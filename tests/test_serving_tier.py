@@ -187,12 +187,22 @@ def test_traffic_trace_rejects_queries_past_horizon():
     end = trace.end_seconds
     assert end >= 3600.0  # the trace covers the horizon it was built for
     trace.at(end)  # the boundary itself is in range
-    # the final in-simulation window may overhang the end by part of a
-    # tick: t1 clamps to the samples that exist (documented behavior)
-    short = trace.window_peak(end - 30.0, end + 600.0)
+    horizon = trace.horizon_seconds
+    assert horizon == 3600.0
+    # the final in-simulation window may overhang the trace end by part
+    # of a tick: t1 clamps to the samples that exist (documented, and
+    # bounded by tick - sample thanks to the trailing sample padding)
+    short = trace.window_peak(horizon, horizon + 600.0)
     assert short.shape == (len(SERVICES),)
+    full = trace.window_peak(horizon, end)
+    assert np.array_equal(short, full)  # the clamp reads the same samples
     with pytest.raises(ValueError):
         trace.at(end + 1.0)
+    # a window STARTING in the trailing padding is an out-of-horizon
+    # query, not a legitimate final-window overhang: it must raise like
+    # ``at`` does, not silently read padding samples
+    with pytest.raises(ValueError):
+        trace.window_peak(horizon + 1.0, horizon + 600.0)
     with pytest.raises(ValueError):
         trace.window_peak(end + 1.0, end + 600.0)
     # driving a 2h simulation off a 1h trace trips the guard instead of

@@ -1,0 +1,260 @@
+"""Water-filling expansion: property-tested against a marginal-utility
+oracle.
+
+The policy's pass 3 fills spare capacity over the jobs' concave scaling
+curves in two vectorized blocks (pre-knee chunks in scale-up order, then
+post-knee chunks by descending slope).  The oracle here is the
+*specification* it implements: grant spare GPUs one at a time, each to
+the gated candidate whose next GPU has the highest marginal utility
+(slope x interval), ties broken by (scale-up priority, index).  With
+strictly-concave curves (``sat_slope < 1``) the two formulations must
+agree exactly; with flat curves both must reduce to the seed's linear
+expansion.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sla import TIERS
+from repro.scheduler.costs import CostModel
+from repro.scheduler.policy import ElasticPolicy
+from repro.scheduler.simulator import (
+    FleetSimulator,
+    SimConfig,
+    make_fleet,
+    synth_workload,
+)
+from repro.scheduler.types import Cluster, Fleet, Job, Region
+
+INTERVAL = 300.0
+TIER_NAMES = ["premium", "standard", "basic"]
+
+
+def _running_job(i, tier, demand, knee, sat):
+    """A job running steadily at full demand with a healthy SLA history
+    (min_gpus == demand keeps passes 1/1b/2 trivial: everyone sits at
+    exactly ``demand`` when pass 3 starts)."""
+    j = Job(
+        id=f"j{i:03d}",
+        tier=tier,
+        demand_gpus=demand,
+        gpu_hours=demand * 4.0,
+        arrival=0.0,
+        min_gpus=demand,
+        knee_gpus=knee,
+        sat_slope=sat,
+    )
+    j.allocated = demand
+    j.cluster = "c0"
+    j.ever_ran = True
+    j.account.record(0.0, 1800.0, demand)
+    return j
+
+
+def _oracle(spec, spare, resize_s):
+    """Per-GPU marginal-utility greedy over the jobs' curves.
+
+    ``spec`` rows are (demand, knee, sat, sup) for jobs running at
+    ``galloc == demand``; ``resize_s`` None means no cost model (every
+    gate open).  Returns the expansion grant per job."""
+    n = len(spec)
+    grants = [0] * n
+    chunks = []
+    for demand, knee, sat, _sup in spec:
+        galloc = demand
+        target = 2 * demand  # expand_factor == 2
+        end_a = min(max(knee, galloc), target) if knee > 0 else target
+        d_a = end_a - galloc
+        d_b = target - end_a
+        if resize_s is None:
+            gate_a = gate_b = True
+        else:
+            gate_a = resize_s * (galloc + d_a) < d_a * INTERVAL
+            if d_a > 0:
+                gate_b = gate_a and sat * INTERVAL > resize_s
+            else:
+                gate_b = resize_s * (galloc + d_b) < sat * INTERVAL * d_b
+        chunks.append((d_a, d_b, gate_a, gate_b))
+    rem = spare
+    while rem > 0:
+        best, best_key = None, None
+        for i, (demand, knee, sat, sup) in enumerate(spec):
+            d_a, d_b, gate_a, gate_b = chunks[i]
+            g = grants[i]
+            if g < d_a:
+                if not gate_a:
+                    continue  # an ungated pre-knee chunk blocks the job
+                slope = INTERVAL
+            elif g < d_a + d_b:
+                if not gate_b:
+                    continue
+                slope = sat * INTERVAL
+            else:
+                continue
+            key = (-slope, sup, i)
+            if best_key is None or key < best_key:
+                best, best_key = i, key
+        if best is None:
+            break
+        grants[best] += 1
+        rem -= 1
+    return grants
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 50_000), n=st.integers(1, 12), costed=st.booleans())
+def test_expansion_matches_marginal_utility_oracle(seed, n, costed):
+    rng = np.random.Generator(np.random.Philox(seed))
+    jobs, spec = [], []
+    for i in range(n):
+        demand = int(2 ** rng.integers(2, 6))  # 4..32
+        if rng.integers(0, 2):
+            knee = int(rng.integers(demand, 2 * demand + 1))
+            sat = float(rng.uniform(0.05, 0.95))  # strictly concave
+        else:
+            knee, sat = 0, 1.0
+        tier = str(rng.choice(TIER_NAMES))
+        jobs.append(_running_job(i, tier, demand, knee, sat))
+        spec.append((demand, knee, sat, TIERS[tier].scaleup_priority))
+    total_demand = sum(s[0] for s in spec)
+    # spare must clear the 10%-slack threshold or pass 3 never runs
+    spare = max(
+        int(rng.integers(1, total_demand + 1)), total_demand // 9 + 1
+    )
+    fleet = Fleet([Region("r0", [Cluster("c0", "r0", total_demand + spare)])])
+    if costed:
+        resize_s = float(rng.uniform(1.0, INTERVAL))
+        cm = CostModel.uniform(1.0, resize_cost_seconds=resize_s)
+    else:
+        resize_s, cm = None, None
+    expect = _oracle(spec, spare, resize_s)
+    for vectorized in (True, False):
+        pol = ElasticPolicy(
+            cost_model=cm, interval_hint=INTERVAL, vectorized=vectorized
+        )
+        d = pol.decide(1800.0, jobs, fleet)
+        got = [d.alloc[j.id][0] - j.demand_gpus for j in jobs]
+        assert got == expect, (vectorized, spec, spare, resize_s)
+        # curve-granted jobs are tagged for slope-cause telemetry
+        tagged = set(d.slope_expanded or ())
+        want_tagged = {
+            jobs[i].id for i in range(n) if spec[i][1] > 0 and expect[i] > 0
+        }
+        assert tagged == want_tagged
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 50_000), n=st.integers(1, 10))
+def test_curve_unaware_policy_reduces_to_flat(seed, n):
+    """``curve_aware=False`` on curved jobs must decide exactly like the
+    default policy on flattened clones — the seed's linear expansion."""
+    rng = np.random.Generator(np.random.Philox(seed))
+    curved, flat = [], []
+    for i in range(n):
+        demand = int(2 ** rng.integers(2, 6))
+        knee = int(rng.integers(demand, 2 * demand + 1))
+        sat = float(rng.uniform(0.0, 1.0))
+        tier = str(rng.choice(TIER_NAMES))
+        curved.append(_running_job(i, tier, demand, knee, sat))
+        flat.append(_running_job(i, tier, demand, 0, 1.0))
+    total = sum(j.demand_gpus for j in curved)
+    fleet_a = Fleet([Region("r0", [Cluster("c0", "r0", 2 * total)])])
+    fleet_b = Fleet([Region("r0", [Cluster("c0", "r0", 2 * total)])])
+    cm = CostModel()
+    blind = ElasticPolicy(cost_model=cm, interval_hint=INTERVAL, curve_aware=False)
+    seed_pol = ElasticPolicy(cost_model=cm, interval_hint=INTERVAL)
+    d_blind = blind.decide(1800.0, curved, fleet_a)
+    d_seed = seed_pol.decide(1800.0, flat, fleet_b)
+    assert dict(d_blind.alloc) == dict(d_seed.alloc)
+    assert d_blind.slope_expanded is None
+    assert d_seed.slope_expanded is None
+
+
+def test_expansion_stops_at_the_knee_when_slope_below_burn():
+    """The slope-vs-burn gate: a curved job expands to its knee and no
+    further when the post-knee slope cannot pay the resize burn, while a
+    flat twin under the same costs expands fully (the legacy gate)."""
+    # resize 60s, interval 300s: pre-knee chunk gains 5*300 = 1500 >
+    # burn 60*15 = 900 -> granted; post-knee slope 0.1*300 = 30 < 60 ->
+    # refused.  The flat twin's whole chunk gains 10*300 > 60*20 -> full.
+    cm = CostModel.uniform(360.0, resize_cost_seconds=60.0)
+    fleet = Fleet([Region("r0", [Cluster("c0", "r0", 100)])])
+    curved = _running_job(0, "standard", 10, 15, 0.1)
+    d = ElasticPolicy(cost_model=cm, interval_hint=INTERVAL).decide(
+        1800.0, [curved], fleet
+    )
+    assert d.alloc[curved.id][0] == 15  # stopped exactly at the knee
+    assert d.slope_expanded == (curved.id,)
+
+    flat = _running_job(0, "standard", 10, 0, 1.0)
+    d = ElasticPolicy(cost_model=cm, interval_hint=INTERVAL).decide(
+        1800.0, [flat], fleet
+    )
+    assert d.alloc[flat.id][0] == 20
+    assert d.slope_expanded is None
+
+    # a steeper curve clears the marginal gate and fills past the knee
+    steep = _running_job(0, "standard", 10, 15, 0.5)  # 150 s/GPU > 60 s
+    d = ElasticPolicy(cost_model=cm, interval_hint=INTERVAL).decide(
+        1800.0, [steep], fleet
+    )
+    assert d.alloc[steep.id][0] == 20
+    assert d.slope_expanded == (steep.id,)
+
+
+def test_shrink_gate_prices_the_shrunk_operating_point():
+    """Shrink-before-queue on a curved job is only worth a restart whose
+    downtime beats the *shrunk* slice's productive value, not a full
+    interval."""
+    # standard tier: shrunk = demand * (0.7 + 0.1) = 16 of 20.  A
+    # preempted job carrying 270s restore debt: 270 >= 300 * 16/20 = 240
+    # -> a curved job stays queued; the flat twin (priced at the full
+    # interval, 270 < 300) shrinks in.
+    def _queued(knee):
+        j = Job(
+            id="q",
+            tier="standard",
+            demand_gpus=20,
+            gpu_hours=80.0,
+            arrival=0.0,
+            min_gpus=1,
+            knee_gpus=knee,
+            sat_slope=0.5 if knee else 1.0,
+        )
+        j.ever_ran = True
+        j.restore_debt = 270.0
+        j.account.record(0.0, 1800.0, 20)
+        return j
+
+    # capacity 12: pass 1's all-or-nothing shrunk slice (16) cannot fit,
+    # so admission falls to the shrink-before-queue pass
+    fleet = Fleet([Region("r0", [Cluster("c0", "r0", 12)])])
+    cm = CostModel.uniform(0.0, restore_cost_seconds=0.0, resize_cost_seconds=0.0)
+    pol = ElasticPolicy(cost_model=cm, interval_hint=INTERVAL)
+    d_flat = pol.decide(1800.0, [_queued(0)], fleet)
+    assert d_flat.alloc["q"][0] == 12  # legacy gate: 270 < 300
+    d_curved = pol.decide(1800.0, [_queued(40)], fleet)
+    assert d_curved.alloc["q"][0] == 0  # curve gate: 270 >= 240
+
+
+def test_full_simulation_identical_under_both_paths_with_curves():
+    """End to end on a curved trace (node-granular placement included):
+    vectorized and reference decisions must stay byte-identical."""
+    results = {}
+    for vectorized in (True, False):
+        sim = FleetSimulator(
+            make_fleet(),
+            synth_workload(60, 2048, seed=13, curves=True),
+            ElasticPolicy(vectorized=vectorized),
+            SimConfig(horizon_seconds=12 * 3600),
+        )
+        results[vectorized] = sim.run()
+    a, b = results[True], results[False]
+    assert a.utilization == b.utilization
+    assert a.completed == b.completed
+    assert (a.preemptions, a.migrations, a.resizes, a.restores) == (
+        b.preemptions,
+        b.migrations,
+        b.resizes,
+        b.restores,
+    )
+    assert a.gpu_seconds_dead == b.gpu_seconds_dead
